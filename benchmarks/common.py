@@ -1,0 +1,115 @@
+"""Shared benchmark utilities: measured per-task costs + cost composition.
+
+Methodology (DESIGN.md §9): computation-reuse speedups come purely from WHICH
+duplicate tasks are skipped, so makespans are composed from *measured* JAX
+wall-times of the real pipeline tasks. Reuse fractions are exact analytic
+counts on the reuse trie — the same accounting the paper uses.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.app import TABLE1_SPACE, synthetic_tile
+from repro.app.pipeline import build_workflow
+from repro.core import (
+    StageSpec,
+    Workflow,
+    build_reuse_tree,
+    morris_trajectories,
+    rtma_buckets,
+    simulate_execution,
+    stage_level_dedup,
+)
+from repro.core.params import ParamSet, ParamSpace
+
+
+def measure_task_costs(h: int = 128, w: int = 128, *, repeats: int = 2) -> Dict[str, float]:
+    """Wall-time each pipeline task once (jit-warmed) on a real tile."""
+    wf = build_workflow(h, w)
+    tile = synthetic_tile(h, w, seed=0)
+    norm, seg = wf.stages
+    defaults = dict(TABLE1_SPACE.default())
+    costs: Dict[str, float] = {}
+
+    state = {"raw": jnp.asarray(tile)}
+    state = norm.tasks[0].fn(state)  # warm (jit compile)
+    jax.block_until_ready(state["rgb"])
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        state = norm.tasks[0].fn({"raw": jnp.asarray(tile)})
+        jax.block_until_ready(state["rgb"])
+    costs["normalize"] = (time.perf_counter() - t0) / repeats
+
+    for task in seg.tasks:
+        kw = {k: defaults[k] for k in task.param_names}
+        out = task.fn(state, **kw)  # warm
+        jax.block_until_ready(list(out.values())[0])
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = task.fn(state, **kw)
+            jax.block_until_ready(list(out.values())[0])
+        costs[task.name] = (time.perf_counter() - t0) / repeats
+        state = out
+    return costs
+
+
+def moat_param_sets(n_runs: int, *, seed: int = 0, space: ParamSpace = TABLE1_SPACE) -> List[ParamSet]:
+    """A MOAT study with ~n_runs runs (trajectories of dim+1 runs each)."""
+    n_traj = max(1, n_runs // (space.dim + 1))
+    sets, _ = morris_trajectories(space, n_traj, seed=seed)
+    return sets[:n_runs]
+
+
+def strategy_work_seconds(
+    stage: StageSpec,
+    norm_cost: float,
+    param_sets: Sequence[ParamSet],
+    strategy: str,
+    *,
+    max_bucket: int = 8,
+    workers: int = 1,
+) -> Dict[str, float]:
+    """Total work + makespan (measured-cost-weighted) for one reuse strategy.
+
+    Normalization is parameter-free: with any reuse it runs once; without
+    reuse it runs per-instance (the paper's stage-level baseline gain)."""
+    wf = Workflow(stages=(stage,))
+    insts = wf.instantiate(list(param_sets))[stage.name]
+    n = len(insts)
+
+    if strategy == "none":
+        total = n * norm_cost
+        tree_work = sum(
+            t.bound_cost(dict(i.params)) for i in insts for t in stage.tasks
+        )
+        return {"work_s": total + tree_work, "tasks": n * len(stage.tasks)}
+    if strategy == "stage":
+        reps, _ = stage_level_dedup(insts)
+        work = norm_cost + sum(
+            t.bound_cost(dict(r.params)) for r in reps for t in stage.tasks
+        )
+        return {"work_s": work, "tasks": len(reps) * len(stage.tasks)}
+    if strategy in ("rtma", "rmsr"):
+        b = max_bucket if strategy == "rtma" else n
+        buckets = rtma_buckets(stage, insts, b)
+        work = norm_cost
+        tasks = 0
+        for bk in buckets:
+            tree = build_reuse_tree(stage, bk.instances)
+            res = simulate_execution(tree, 10**9)
+            work += res.total_cost
+            tasks += tree.unique_task_count()
+        return {"work_s": work, "tasks": tasks}
+    raise ValueError(strategy)
+
+
+# Calibration (see fig7/table2 docstrings): working-set planes per in-flight
+# stage instance / active RMSR path, implied by the paper's memory anchors
+# (RTMA(2,2) @4K = 6 GB; Table II (9K, 64 GB) -> bucket 4).
+PLANES_PER_INSTANCE = 47

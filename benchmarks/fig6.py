@@ -1,0 +1,41 @@
+"""Fig 6 — performance benefit of reuse strategies (No reuse / Stage-level /
+multi-level RTMA) for MOAT studies of two sampling sizes.
+
+Paper claims (640 sets): Stage ≈ 1.7×, RTMA multi-level ≈ 2.6× vs No reuse.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.app import TABLE1_SPACE
+from repro.app.pipeline import build_segmentation_stage
+
+from benchmarks.common import measure_task_costs, moat_param_sets, strategy_work_seconds
+
+H = W = 128
+
+
+def run(csv: List[str]) -> None:
+    costs = measure_task_costs(H, W)
+    profiles = {"measured": costs}
+    # paper-cost-profile: the paper's app spends ~41% of a run in the
+    # parameter-free normalization (that ratio is what yields its 1.7×
+    # stage-level gain); validate the multi-level mechanism under it.
+    seg_total = sum(v for k, v in costs.items() if k != "normalize")
+    profiles["papercal"] = dict(costs, normalize=seg_total * 0.41 / 0.59)
+    for pname, prof in profiles.items():
+        stage = build_segmentation_stage(
+            H, W, costs={k: v for k, v in prof.items()}
+        )
+        norm_cost = prof["normalize"]
+        for n_runs in (320, 640):
+            sets = moat_param_sets(n_runs, seed=1)
+            base = strategy_work_seconds(stage, norm_cost, sets, "none")
+            for strat in ("stage", "rtma"):
+                out = strategy_work_seconds(stage, norm_cost, sets, strat, max_bucket=8)
+                speedup = base["work_s"] / out["work_s"]
+                csv.append(
+                    f"fig6_{pname}_{strat}_n{n_runs},{out['work_s']*1e6/max(n_runs,1):.1f},"
+                    f"speedup={speedup:.2f}x_tasks={int(out['tasks'])}"
+                )

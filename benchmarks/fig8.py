@@ -1,0 +1,85 @@
+"""Fig 8 — multi-core and multi-node scalability.
+
+(a) multi-core: RMSR makespan vs worker count on one merged stage.
+(b) multi-node: discrete-event simulation of the Manager-Worker cluster at
+    paper scale (6,113 4K×4K tiles, 32→256 nodes × 28 cores), plus a REAL
+    multi-worker Manager run at container scale (threads, real JAX tasks).
+
+Paper claim: ≈ 0.92 parallel efficiency at 256 nodes (7,168 cores).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.app import synthetic_tile
+from repro.app.pipeline import build_segmentation_stage
+from repro.core import Workflow, build_reuse_tree, rtma_buckets, simulate_execution
+from repro.core.rmsr import execute_merged_stage
+from repro.runtime import Manager, WorkItem, simulate_cluster
+
+from benchmarks.common import measure_task_costs, moat_param_sets
+
+
+def run(csv: List[str]) -> None:
+    costs = measure_task_costs(128, 128)
+    scale = (4096 / 128) ** 2
+    stage = build_segmentation_stage(4096, 4096, costs={k: v * scale for k, v in costs.items()})
+    sets = moat_param_sets(160, seed=4)
+    insts = Workflow(stages=(stage,)).instantiate(sets)[stage.name]
+    tree = build_reuse_tree(stage, insts)
+
+    # (a) multi-core scaling of one merged stage under RMSR
+    t1 = simulate_execution(tree, 1).makespan
+    for w in (2, 4, 8, 16, 28):
+        tw = simulate_execution(tree, w).makespan
+        csv.append(f"fig8a_cores{w},{tw*1e6:.0f},speedup={t1/tw:.2f}x_ideal={w}")
+
+    # (b) multi-node: 6,113 tiles × per-tile merged-stage bucket costs
+    buckets = rtma_buckets(stage, insts, 28)
+    per_bucket = [simulate_execution(b.tree(stage), 28).makespan for b in buckets]
+    tile_costs = []
+    rng = np.random.default_rng(0)
+    for _ in range(6113):
+        tile_costs.extend(c * rng.uniform(0.9, 1.1) for c in per_bucket)
+    base = simulate_cluster(tile_costs, n_nodes=1)
+    for nodes in (32, 64, 128, 256):
+        sim = simulate_cluster(tile_costs, n_nodes=nodes)
+        eff = base.makespan / (sim.makespan * nodes)
+        csv.append(
+            f"fig8b_nodes{nodes},{sim.makespan*1e6:.0f},efficiency={eff:.3f}"
+        )
+
+    # real multi-worker Manager run (threads, real JAX execution, small tiles)
+    tile = synthetic_tile(64, 64, seed=5)
+    import jax.numpy as jnp
+    from repro.app.pipeline import build_workflow
+
+    wf = build_workflow(64, 64)
+    norm, seg = wf.stages
+    state = norm.tasks[0].fn({"raw": jnp.asarray(tile)})
+    small_sets = moat_param_sets(32, seed=6)
+    small_insts = Workflow(stages=(seg,)).instantiate(small_sets)[seg.name]
+    small_buckets = rtma_buckets(seg, small_insts, 8)
+
+    def exec_bucket(bk):
+        return execute_merged_stage(bk.tree(seg), state, active_paths=2)
+
+    for bk in small_buckets:  # warm: jit compile every task variant
+        exec_bucket(bk)
+
+    times = {}
+    for w in (1, 2, 4):
+        mgr = Manager()
+        for i, bk in enumerate(small_buckets):
+            mgr.submit(WorkItem(key=f"b{i}", fn=lambda bk=bk: exec_bucket(bk)))
+        t0 = time.perf_counter()
+        mgr.run(w, expected=len(small_buckets))
+        times[w] = time.perf_counter() - t0
+        csv.append(
+            f"fig8real_workers{w},{times[w]*1e6:.0f},"
+            f"speedup={times[1]/times[w]:.2f}x_(container_has_1_core)"
+        )

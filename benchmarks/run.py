@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines (plus the roofline summary if a
+dry-run JSON is present).
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,table2,fig8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+from typing import List
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list: fig6,fig7,table2,fig8")
+    args = ap.parse_args()
+    wanted = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import fig6, fig7, fig8, table2
+
+    modules = {"fig6": fig6, "fig7": fig7, "table2": table2, "fig8": fig8}
+    csv: List[str] = ["name,us_per_call,derived"]
+    for name, mod in modules.items():
+        if wanted and name not in wanted:
+            continue
+        t0 = time.time()
+        try:
+            mod.run(csv)
+            print(f"# {name}: ok ({time.time()-t0:.1f}s)", file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            print(f"# {name}: FAILED\n{traceback.format_exc()}", file=sys.stderr)
+            csv.append(f"{name}_FAILED,0,error")
+
+    # roofline summary from the dry-run, when present
+    dj = pathlib.Path("experiments/dryrun.json")
+    if dj.exists() and (wanted is None or "roofline" in wanted):
+        for r in json.loads(dj.read_text()):
+            if r.get("status") != "ok":
+                continue
+            csv.append(
+                f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},"
+                f"{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.0f},"
+                f"dom={r['dominant'].replace('_s','')}"
+                f"_cf={r['roofline_fraction_compute']:.2f}"
+                f"_useful={r.get('useful_flops_ratio', 0):.2f}"
+            )
+    print("\n".join(csv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Table II — task reuse attained by RTMA vs RMSR as images grow, for 64 GB
+and 128 GB machines, on a VBD study with 8,000 parameter sets.
+
+RTMA memory is width-proportional: bucket × (47 fp32 planes × px) — the
+calibration implied by the paper's (9K, 64 GB) → bucket 4 anchor; larger
+images then force smaller buckets and less reuse (the paper's 31.75% →
+21.82% decay). RMSR's activePaths bound makes bucket 10 feasible at any
+memory, holding reuse constant.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.app import TABLE1_SPACE
+from repro.app.pipeline import build_segmentation_stage
+from repro.core import Workflow, bucket_reuse_stats, rtma_buckets
+from repro.core.sa import saltelli_sample
+
+from benchmarks.common import PLANES_PER_INSTANCE
+
+GB = 1 << 30
+
+
+def run(csv: List[str]) -> None:
+    sets, _ = saltelli_sample(TABLE1_SPACE, 8000 // (TABLE1_SPACE.dim + 2), seed=3)
+    for size_k in (9, 10, 11):
+        px = size_k * 1024
+        stage = build_segmentation_stage(px, px)
+        insts = Workflow(stages=(stage,)).instantiate(sets)[stage.name]
+        w_inst = PLANES_PER_INSTANCE * px * px * 4
+        for mem_gb in (64, 128):
+            b = max(1, min(10, int(mem_gb * GB // w_inst)))
+            st = bucket_reuse_stats(stage, rtma_buckets(stage, insts, b))
+            csv.append(
+                f"table2_rtma_{size_k}K_{mem_gb}GB,0,"
+                f"bucket={b}_reuse={st['reuse_fraction']*100:.2f}%"
+            )
+        st = bucket_reuse_stats(stage, rtma_buckets(stage, insts, 10))
+        csv.append(
+            f"table2_rmsr_{size_k}K_anyGB,0,bucket=10_reuse={st['reuse_fraction']*100:.2f}%"
+        )

@@ -1,0 +1,102 @@
+"""End-to-end driver: distributed SA study over multiple tiles.
+
+The Manager dispatches merged-stage buckets demand-driven to Workers
+(threads here; nodes in production), with straggler backup-tasks enabled.
+Compares no-reuse vs RMSR wall-clock on real JAX execution and computes
+Spearman correlations of each parameter against the Dice difference.
+
+    PYTHONPATH=src python examples/sa_pathology.py [--runs 48] [--tiles 2]
+"""
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.app import synthetic_tile
+from repro.app.pipeline import build_workflow, TABLE1_SPACE
+from repro.core import (
+    Workflow,
+    correlation_indices,
+    dice,
+    morris_trajectories,
+    rtma_buckets,
+)
+from repro.core.params import ParamSpace
+from repro.core.rmsr import execute_merged_stage
+from repro.runtime import Manager, run_study_distributed
+
+SPACE = ParamSpace.from_dict(
+    {
+        "B": [210, 220, 230], "G": [210, 220, 230], "R": [210, 220, 230],
+        "T1": [2.5, 5.0, 7.5], "T2": [2.5, 5.0, 7.5],
+        "G1": [20, 40, 60], "G2": [10, 20, 30],
+        "minS": [2, 10, 20], "maxS": [900, 1200, 1500],
+        "minSPL": [5, 20, 40], "minSS": [2, 10, 20], "maxSS": [900, 1200, 1500],
+        "FH": [4, 8], "RC": [4, 8], "WConn": [4, 8],
+    }
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=48)
+    ap.add_argument("--tiles", type=int, default=2)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--size", type=int, default=72)
+    args = ap.parse_args()
+
+    sets, _ = morris_trajectories(SPACE, max(1, args.runs // (SPACE.dim + 1)), seed=3)
+    sets = sets[: args.runs]
+    wf = build_workflow(args.size, args.size)
+    norm, seg = wf.stages
+    ref = TABLE1_SPACE.default()
+
+    all_scores = {rid: [] for rid in range(len(sets))}
+    t_naive = t_rmsr = 0.0
+    for tidx in range(args.tiles):
+        tile = synthetic_tile(args.size, args.size, seed=tidx)
+        state = norm.tasks[0].fn({"raw": jnp.asarray(tile)})
+        insts = Workflow(stages=(seg,)).instantiate(list(sets))[seg.name]
+
+        # reference mask under default parameters
+        ref_state = state
+        d = dict(ref)
+        for t in seg.tasks:
+            ref_state = t.fn(ref_state, **{k: d[k] for k in t.param_names})
+        ref_mask = ref_state["mask"]
+
+        # naive: every instance independently
+        t0 = time.perf_counter()
+        for inst in insts[: max(4, len(insts) // 8)]:  # subsample for timing
+            s = state
+            dd = dict(inst.params)
+            for t in seg.tasks:
+                s = t.fn(s, **{k: dd[k] for k in t.param_names})
+        t_naive += (time.perf_counter() - t0) * len(insts) / max(4, len(insts) // 8)
+
+        # RMSR via the distributed Manager (demand-driven buckets)
+        buckets = rtma_buckets(seg, insts, len(insts))
+        t0 = time.perf_counter()
+        results = run_study_distributed(
+            buckets,
+            lambda bk: execute_merged_stage(bk.tree(seg), state, active_paths=4),
+            n_workers=args.workers,
+            manager=Manager(straggler_factor=4.0),
+        )
+        t_rmsr += time.perf_counter() - t0
+        for rid, out in results.items():
+            all_scores[rid].append(float(dice(out["mask"], ref_mask)))
+
+    mean_scores = [1.0 - float(np.mean(all_scores[r])) for r in range(len(sets))]
+    print(f"naive (est) {t_naive:.1f}s vs RMSR+Manager {t_rmsr:.1f}s "
+          f"-> {t_naive/max(t_rmsr,1e-9):.2f}x")
+    corr = correlation_indices(SPACE, sets, mean_scores)
+    print("top parameters by |spearman|:")
+    for name, v in sorted(corr.items(), key=lambda kv: -abs(kv[1]["spearman"]))[:8]:
+        print(f"  {name:8s} spearman={v['spearman']:+.3f} pearson={v['pearson']:+.3f}")
+
+
+if __name__ == "__main__":
+    main()

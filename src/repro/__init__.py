@@ -1,0 +1,7 @@
+"""repro — production-grade JAX framework reproducing and extending
+"Run-time Parameter Sensitivity Analysis Optimizations" (RMSR, 2019):
+multi-level computation reuse for parameter sensitivity analysis, adapted to
+TPU pods, plus the LM-architecture zoo, distributed runtime, and Pallas
+kernels required to deploy it at scale."""
+
+__version__ = "1.0.0"

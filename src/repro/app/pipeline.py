@@ -1,0 +1,269 @@
+"""The paper's motivating application as a :class:`repro.core.Workflow`.
+
+Three coarse stages (Fig 1): **normalization** (parameter-free, hence fully
+shared across SA runs), **segmentation** (seven fine-grain tasks Seg0..Seg6,
+consuming the Table I parameters in pipeline order) and **comparison** (Dice
+vs the default-parameter reference).
+
+The per-task parameter mapping is the contract the reuse trie keys on:
+
+  Seg0 background   (B, G, R)          Seg4 area-pre     (minS, maxS)
+  Seg1 rbc          (T1, T2)           Seg5 watershed    (minSPL, WConn)
+  Seg2 morph-recon  (G1, RC)           Seg6 area-final   (minSS, maxSS)
+  Seg3 threshold+fh (G2, FH)
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.app import ops
+from repro.core import (
+    ParamSpace,
+    StageSpec,
+    TaskSpec,
+    Workflow,
+    build_reuse_tree,
+    dice,
+    execute_merged_stage,
+    rtma_buckets,
+    stage_level_dedup,
+)
+from repro.core.params import ParamSet
+
+__all__ = [
+    "TABLE1_SPACE",
+    "synthetic_tile",
+    "build_segmentation_stage",
+    "build_workflow",
+    "run_study",
+]
+
+# --------------------------------------------------------------------------
+# Table I of the paper — the application parameter space.
+# --------------------------------------------------------------------------
+
+TABLE1_SPACE = ParamSpace.from_dict(
+    {
+        "B": list(range(210, 241, 10)),
+        "G": list(range(210, 241, 10)),
+        "R": list(range(210, 241, 10)),
+        "T1": [x / 2.0 for x in range(5, 16)],  # 2.5 .. 7.5
+        "T2": [x / 2.0 for x in range(5, 16)],
+        "G1": list(range(5, 81, 5)),
+        "G2": list(range(2, 41, 2)),
+        "minS": list(range(2, 41, 2)),
+        "maxS": list(range(900, 1501, 50)),
+        "minSPL": list(range(5, 81, 5)),
+        "minSS": list(range(2, 41, 2)),
+        "maxSS": list(range(900, 1501, 50)),
+        "FH": [4, 8],
+        "RC": [4, 8],
+        "WConn": [4, 8],
+    }
+)
+
+
+def synthetic_tile(h: int = 256, w: int = 256, *, seed: int = 0) -> np.ndarray:
+    """Synthetic H&E-like tile: pink stroma, dark nuclei blobs, red RBCs and
+    a bright glass/background band — enough structure for every Table I
+    parameter to matter."""
+    rng = np.random.default_rng(seed)
+    img = np.empty((h, w, 3), np.float32)
+    img[..., 0] = 215 + rng.normal(0, 6, (h, w))  # R
+    img[..., 1] = 170 + rng.normal(0, 6, (h, w))  # G
+    img[..., 2] = 195 + rng.normal(0, 6, (h, w))  # B
+    yy, xx = np.mgrid[0:h, 0:w]
+
+    def blobs(n, rmin, rmax, color, jitter=10.0):
+        for _ in range(n):
+            cy, cx = rng.integers(0, h), rng.integers(0, w)
+            rad = rng.uniform(rmin, rmax)
+            d2 = (yy - cy) ** 2 + (xx - cx) ** 2
+            m = d2 < rad**2
+            for c in range(3):
+                img[..., c][m] = color[c] + rng.normal(0, jitter)
+
+    blobs(max(4, h * w // 1600), 3.0, 9.0, (110, 70, 150))  # nuclei (purple)
+    blobs(max(2, h * w // 6400), 2.0, 6.0, (190, 60, 70))  # RBCs (red)
+    img[: h // 8, :, :] = 245 + rng.normal(0, 3, (h // 8, w, 3))  # glass
+    return np.clip(img, 0, 255).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Task implementations. State is a dict of arrays flowing down the pipeline.
+# --------------------------------------------------------------------------
+
+
+def _t_background(state, B, G, R):
+    rgb = state["rgb"]
+    fg = ops.background_mask(rgb, jnp.float32(B), jnp.float32(G), jnp.float32(R))
+    return {"rgb": rgb, "fg": fg}
+
+
+def _t_rbc(state, T1, T2):
+    rgb, fg = state["rgb"], state["fg"]
+    rbc = ops.rbc_mask(rgb, jnp.float32(T1), jnp.float32(T2))
+    keep = fg & ~rbc
+    gray = (255.0 - rgb[..., 2]) * keep.astype(jnp.float32)  # hematoxylin proxy
+    return {"gray": gray}
+
+
+def _t_recon(state, G1, RC):
+    gray = state["gray"]
+    marker = jnp.maximum(gray - jnp.float32(G1), 0.0)
+    recon = ops.morph_reconstruct(marker, gray, conn=int(RC), use_kernel=False)
+    return {"gray": gray, "residual": gray - recon}
+
+
+def _t_threshold(state, G2, FH):
+    cand = state["residual"] > jnp.float32(G2) * 0.5
+    return {"mask": ops.fill_holes(cand, conn=int(FH))}
+
+
+def _t_area_pre(state, minS, maxS):
+    return {"mask": ops.area_filter(state["mask"], jnp.int32(minS), jnp.int32(maxS))}
+
+
+def _t_watershed(state, minSPL, WConn):
+    return {"mask": ops.watershed_split(state["mask"], jnp.int32(minSPL), conn=int(WConn))}
+
+
+def _t_area_final(state, minSS, maxSS):
+    return {"mask": ops.area_filter(state["mask"], jnp.int32(minSS), jnp.int32(maxSS))}
+
+
+def build_segmentation_stage(
+    h: int, w: int, costs: Optional[Dict[str, float]] = None
+) -> StageSpec:
+    """The Seg0..Seg6 pipeline with byte-exact output sizes for the memory
+    model (float32 image payloads dominate; masks are byte-packed)."""
+    px = h * w
+    costs = costs or {}
+    spec = [
+        ("seg0_background", ("B", "G", "R"), _t_background, 4 * px * 3 + px),
+        ("seg1_rbc", ("T1", "T2"), _t_rbc, 4 * px),
+        ("seg2_recon", ("G1", "RC"), _t_recon, 8 * px),
+        ("seg3_threshold", ("G2", "FH"), _t_threshold, px),
+        ("seg4_area_pre", ("minS", "maxS"), _t_area_pre, px),
+        ("seg5_watershed", ("minSPL", "WConn"), _t_watershed, px),
+        ("seg6_area_final", ("minSS", "maxSS"), _t_area_final, px),
+    ]
+    default_cost = {"seg2_recon": 4.0, "seg5_watershed": 3.0}
+    tasks = tuple(
+        TaskSpec(
+            name=n,
+            param_names=p,
+            fn=f,
+            cost=costs.get(n, default_cost.get(n, 1.0)),
+            output_bytes=b,
+        )
+        for n, p, f, b in spec
+    )
+    return StageSpec(name="segmentation", tasks=tasks)
+
+
+def build_workflow(h: int, w: int, costs: Optional[Dict[str, float]] = None) -> Workflow:
+    px = h * w
+    norm = StageSpec(
+        name="normalization",
+        tasks=(
+            TaskSpec(
+                name="normalize",
+                param_names=(),
+                fn=lambda s: {"rgb": ops.normalize_tile(s["raw"])},
+                cost=1.0,
+                output_bytes=12 * px,
+            ),
+        ),
+    )
+    seg = build_segmentation_stage(h, w, costs)
+    return Workflow(stages=(norm, seg))
+
+
+# --------------------------------------------------------------------------
+# SA study driver with selectable reuse strategy.
+# --------------------------------------------------------------------------
+
+
+def _run_instance_naive(stage: StageSpec, state, params: ParamSet):
+    d = dict(params)
+    for t in stage.tasks:
+        kw = {k: d[k] for k in t.param_names}
+        state = t.fn(state, **kw)
+    return state
+
+
+def run_study(
+    image: np.ndarray,
+    param_sets: Sequence[ParamSet],
+    *,
+    strategy: str = "rmsr",
+    max_bucket_size: Optional[int] = None,
+    active_paths: int = 4,
+    reference_params: Optional[ParamSet] = None,
+    costs: Optional[Dict[str, float]] = None,
+) -> Dict[str, Any]:
+    """Execute an SA study over one tile and return per-run Dice + counters.
+
+    ``strategy`` ∈ {"none", "stage", "rtma", "rmsr"}; ``max_bucket_size``
+    bounds RTMA merging (defaults: rtma→8, rmsr→∞ i.e. one bucket, the
+    paper's headline configuration).
+    """
+    h, w = image.shape[:2]
+    wf = build_workflow(h, w, costs)
+    norm_stage, seg_stage = wf.stages
+    ref_params = reference_params or TABLE1_SPACE.default()
+
+    t0 = time.perf_counter()
+    normalized = norm_stage.tasks[0].fn({"raw": jnp.asarray(image)})
+
+    ref_mask = _run_instance_naive(seg_stage, normalized, ref_params)["mask"]
+
+    instances = wf.instantiate(list(param_sets))[seg_stage.name]
+    tasks_total = len(instances) * len(seg_stage.tasks)
+    results: Dict[int, Any] = {}
+    tasks_executed = 0
+
+    if strategy == "none":
+        for inst in instances:
+            results[inst.run_id] = _run_instance_naive(seg_stage, normalized, inst.params)
+        tasks_executed = tasks_total
+    elif strategy == "stage":
+        reps, mapping = stage_level_dedup(instances)
+        rep_out = [_run_instance_naive(seg_stage, normalized, r.params) for r in reps]
+        tasks_executed = len(reps) * len(seg_stage.tasks)
+        for rid, ridx in mapping.items():
+            results[rid] = rep_out[ridx]
+    elif strategy in ("rtma", "rmsr"):
+        if strategy == "rtma":
+            bsize = max_bucket_size or 8
+        else:
+            bsize = max_bucket_size or len(instances)
+        buckets = rtma_buckets(seg_stage, instances, bsize)
+        for bk in buckets:
+            tree = bk.tree(seg_stage)
+            tasks_executed += tree.unique_task_count()
+            out = execute_merged_stage(tree, normalized, active_paths=active_paths)
+            results.update(out)
+    else:
+        raise ValueError(strategy)
+
+    dices = []
+    for rid in range(len(param_sets)):
+        dices.append(float(dice(results[rid]["mask"], ref_mask)))
+    wall = time.perf_counter() - t0
+    return {
+        "dice": dices,
+        "tasks_total": tasks_total,
+        "tasks_executed": tasks_executed,
+        "reuse_fraction": 1.0 - tasks_executed / max(tasks_total, 1),
+        "wall_seconds": wall,
+        "reference_mask": np.asarray(ref_mask),
+    }

@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing (atomic, async, mesh-agnostic restore)."""
+
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401

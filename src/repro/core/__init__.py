@@ -1,0 +1,36 @@
+"""Core library: the paper's contribution (multi-level computation reuse for
+parameter sensitivity analysis) as composable modules.
+
+Pipeline: sample parameter sets (``params``) → instantiate the hierarchical
+workflow (``workflow``) → stage-level dedup + reuse trie (``reuse``) → bucket
+merging (``rtma``) → memory-bounded depth-first scheduling + execution
+(``rmsr``) → difference metrics (``metrics``) → SA indices (``sa``).
+"""
+
+from repro.core.params import (  # noqa: F401
+    Param,
+    ParamSpace,
+    halton_sequence,
+    hammersley_sequence,
+    latin_hypercube,
+    monte_carlo,
+    morris_trajectories,
+    paramset,
+)
+from repro.core.workflow import StageInstance, StageSpec, TaskSpec, Workflow  # noqa: F401
+from repro.core.reuse import build_reuse_tree, reuse_stats, stage_level_dedup  # noqa: F401
+from repro.core.rtma import Bucket, bucket_reuse_stats, max_bucket_for_budget, rtma_buckets  # noqa: F401
+from repro.core.rmsr import (  # noqa: F401
+    execute_merged_stage,
+    min_active_paths,
+    rmsr_schedule,
+    simulate_execution,
+    tree_peak_bytes,
+)
+from repro.core.sa import (  # noqa: F401
+    correlation_indices,
+    moat_indices,
+    saltelli_sample,
+    vbd_indices,
+)
+from repro.core.metrics import dice, jaccard  # noqa: F401

@@ -1,0 +1,30 @@
+"""Output-difference metrics (paper §II-A): Dice and Jaccard coefficients
+between a run's segmentation mask and the default-parameter reference mask.
+Implemented as fused jnp reductions (one pass over the masks)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dice", "jaccard"]
+
+
+@jax.jit
+def dice(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Dice coefficient of two boolean/binary masks. Returns 1.0 when both
+    masks are empty (identical-by-vacuity), matching common practice."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    inter = jnp.sum(a * b)
+    sizes = jnp.sum(a) + jnp.sum(b)
+    return jnp.where(sizes > 0, 2.0 * inter / jnp.maximum(sizes, 1e-9), 1.0)
+
+
+@jax.jit
+def jaccard(a: jax.Array, b: jax.Array) -> jax.Array:
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    inter = jnp.sum(a * b)
+    union = jnp.sum(jnp.maximum(a, b))
+    return jnp.where(union > 0, inter / jnp.maximum(union, 1e-9), 1.0)

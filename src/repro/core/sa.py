@@ -1,0 +1,141 @@
+"""Sensitivity-analysis methods (paper §II-A).
+
+* MOAT (Morris One-At-A-Time) screening — elementary effects μ, μ*, σ per
+  parameter, from the trajectories produced by
+  :func:`repro.core.params.morris_trajectories`.
+* VBD (variance-based decomposition / Sobol) — first-order S_i and total S_Ti
+  indices via the Saltelli estimator.
+* Correlation measures — Pearson and Spearman coefficients between parameter
+  values and the output metric.
+
+All methods consume a vector of per-run outputs (here: Dice differences of
+each run's segmentation vs the default-parameter segmentation) and return
+per-parameter importance indices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.params import ParamSet, ParamSpace
+
+__all__ = [
+    "MoatResult",
+    "moat_indices",
+    "VbdResult",
+    "saltelli_sample",
+    "vbd_indices",
+    "pearson",
+    "spearman",
+    "correlation_indices",
+]
+
+
+@dataclasses.dataclass
+class MoatResult:
+    mu: Dict[str, float]
+    mu_star: Dict[str, float]
+    sigma: Dict[str, float]
+
+    def ranking(self) -> List[str]:
+        return sorted(self.mu_star, key=lambda k: -self.mu_star[k])
+
+
+def moat_indices(
+    space: ParamSpace,
+    outputs: Sequence[float],
+    moves: Sequence[Sequence[Tuple[int, str]]],
+) -> MoatResult:
+    """Elementary effects from MOAT trajectories.
+
+    ``moves[t]`` lists (run_index, varied_param) for trajectory t; the
+    elementary effect of the k-th move is outputs[i_k] - outputs[i_k - 1].
+    """
+    effects: Dict[str, List[float]] = {p.name: [] for p in space.params}
+    y = np.asarray(outputs, dtype=np.float64)
+    for traj in moves:
+        for run_idx, pname in traj:
+            effects[pname].append(float(y[run_idx] - y[run_idx - 1]))
+    mu, mu_star, sigma = {}, {}, {}
+    for name, es in effects.items():
+        arr = np.asarray(es) if es else np.zeros(1)
+        mu[name] = float(arr.mean())
+        mu_star[name] = float(np.abs(arr).mean())
+        sigma[name] = float(arr.std())
+    return MoatResult(mu=mu, mu_star=mu_star, sigma=sigma)
+
+
+@dataclasses.dataclass
+class VbdResult:
+    first_order: Dict[str, float]
+    total: Dict[str, float]
+
+
+def saltelli_sample(
+    space: ParamSpace, n_base: int, *, seed: int = 0
+) -> Tuple[List[ParamSet], int]:
+    """Saltelli cross-sampling: A, B and the d A_B^(i) matrices.
+
+    Returns (param_sets, n_base); len(param_sets) == n_base * (dim + 2).
+    Run order: [A rows, B rows, A_B^(0) rows, ..., A_B^(d-1) rows].
+    """
+    rng = np.random.default_rng(seed)
+    d = space.dim
+    A = rng.random((n_base, d))
+    B = rng.random((n_base, d))
+    blocks = [A, B]
+    for i in range(d):
+        AB = A.copy()
+        AB[:, i] = B[:, i]
+        blocks.append(AB)
+    pts = np.concatenate(blocks, axis=0)
+    return space.quantise(pts), n_base
+
+
+def vbd_indices(space: ParamSpace, outputs: Sequence[float], n_base: int) -> VbdResult:
+    """Sobol indices with the Jansen estimators."""
+    y = np.asarray(outputs, dtype=np.float64)
+    d = space.dim
+    if len(y) != n_base * (d + 2):
+        raise ValueError("outputs length does not match a Saltelli design")
+    yA = y[:n_base]
+    yB = y[n_base : 2 * n_base]
+    var = np.var(np.concatenate([yA, yB])) or 1e-12
+    first, total = {}, {}
+    for i, p in enumerate(space.params):
+        yABi = y[(2 + i) * n_base : (3 + i) * n_base]
+        first[p.name] = float(np.mean(yB * (yABi - yA)) / var)
+        total[p.name] = float(0.5 * np.mean((yA - yABi) ** 2) / var)
+    return VbdResult(first_order=first, total=total)
+
+
+def pearson(x: np.ndarray, y: np.ndarray) -> float:
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    xc, yc = x - x.mean(), y - y.mean()
+    denom = np.sqrt((xc**2).sum() * (yc**2).sum())
+    return float((xc * yc).sum() / denom) if denom > 0 else 0.0
+
+
+def spearman(x: np.ndarray, y: np.ndarray) -> float:
+    rx = np.argsort(np.argsort(x)).astype(np.float64)
+    ry = np.argsort(np.argsort(y)).astype(np.float64)
+    return pearson(rx, ry)
+
+
+def correlation_indices(
+    space: ParamSpace, param_sets: Sequence[ParamSet], outputs: Sequence[float]
+) -> Dict[str, Dict[str, float]]:
+    y = np.asarray(outputs, dtype=np.float64)
+    out: Dict[str, Dict[str, float]] = {}
+    for p in space.params:
+        vals = []
+        for ps in param_sets:
+            v = dict(ps)[p.name]
+            vals.append(float(p.values.index(v)) if not isinstance(v, (int, float)) else float(v))
+        x = np.asarray(vals)
+        out[p.name] = {"pearson": pearson(x, y), "spearman": spearman(x, y)}
+    return out

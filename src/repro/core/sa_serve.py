@@ -1,0 +1,134 @@
+"""The paper's reuse machinery as a first-class LM-serving feature.
+
+An SA study over a *serving pipeline's* parameters — which system prompt,
+which decoding controls, which post-hoc acceptance threshold — re-executes
+the same pipeline for every parameter set, exactly like the pathology SA.
+The pipeline is expressed as a 3-task stage:
+
+    prefill   (prompt_id)            tokens → KV cache          [expensive]
+    generate  (rep_penalty, top_k)   cache  → generated ids     [expensive]
+    score     (threshold)            ids    → acceptance metric [cheap]
+
+so the reuse trie shares one prefill across every parameter set with the
+same prompt (== prefix caching, derived rather than hand-built), shares
+generation across sets differing only in the threshold, and RMSR's
+activePaths bound caps how many KV caches are live against the HBM budget —
+the exact mechanism the paper uses to decouple merge size from memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.params import ParamSet
+from repro.core.reuse import build_reuse_tree
+from repro.core.rmsr import execute_merged_stage, min_active_paths, rmsr_schedule
+from repro.core.workflow import StageSpec, TaskSpec, Workflow
+from repro.models import decode_step, init_cache, prefill
+
+__all__ = ["build_serve_stage", "run_sa_serve"]
+
+
+def _cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
+    leaves = jax.eval_shape(lambda: init_cache(cfg, batch, max_len)).values()
+    total = 0
+    for leaf in jax.tree.leaves(list(leaves)):
+        total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return total
+
+
+def build_serve_stage(
+    cfg: ModelConfig,
+    params,
+    prompts: Dict[int, np.ndarray],
+    *,
+    gen_len: int = 8,
+    max_len: int = 64,
+) -> StageSpec:
+    """Build the serve pipeline stage over a given model + prompt library."""
+
+    def t_prefill(state, prompt_id):
+        toks = jnp.asarray(prompts[int(prompt_id)])
+        logits, cache, ln = prefill(cfg, params, {"tokens": toks}, max_len=max_len)
+        return {"cache": cache, "len": ln, "last_logits": logits,
+                "tokens": toks}
+
+    def t_generate(state, rep_penalty, top_k):
+        cache, ln = state["cache"], state["len"]
+        logits = state["last_logits"]
+        b = logits.shape[0]
+        out_ids: List[jax.Array] = []
+        confidences: List[jax.Array] = []
+        seen = jnp.zeros((b, cfg.padded_vocab), jnp.float32)
+        for i in range(gen_len):
+            adj = logits - jnp.log(jnp.float32(rep_penalty)) * seen
+            kv, ki = jax.lax.top_k(adj, int(top_k))
+            nxt = ki[:, 0]  # argmax within the top-k after penalty
+            probs = jax.nn.softmax(adj, axis=-1)
+            confidences.append(jnp.take_along_axis(probs, nxt[:, None], 1)[:, 0])
+            seen = seen.at[jnp.arange(b), nxt].add(1.0)
+            out_ids.append(nxt)
+            logits, cache = decode_step(
+                cfg, params, {"tokens": nxt[:, None]}, cache, jnp.int32(ln + i)
+            )
+        return {
+            "ids": jnp.stack(out_ids, 1),
+            "conf": jnp.stack(confidences, 1),
+        }
+
+    def t_score(state, threshold):
+        return {"accept_rate": jnp.mean((state["conf"] > threshold).astype(jnp.float32))}
+
+    any_prompt = next(iter(prompts.values()))
+    cache_b = _cache_bytes(cfg, any_prompt.shape[0], max_len)
+    return StageSpec(
+        name="sa_serve",
+        tasks=(
+            TaskSpec("prefill", ("prompt_id",), t_prefill,
+                     cost=float(any_prompt.shape[1]), output_bytes=cache_b),
+            TaskSpec("generate", ("rep_penalty", "top_k"), t_generate,
+                     cost=float(gen_len), output_bytes=cache_b // 8),
+            TaskSpec("score", ("threshold",), t_score, cost=0.05,
+                     output_bytes=64),
+        ),
+    )
+
+
+def run_sa_serve(
+    cfg: ModelConfig,
+    params,
+    prompts: Dict[int, np.ndarray],
+    param_sets: Sequence[ParamSet],
+    *,
+    gen_len: int = 8,
+    max_len: int = 64,
+    hbm_budget_bytes: Optional[int] = None,
+) -> Dict[str, Any]:
+    """Execute the SA-serve study with maximal merging under a memory budget.
+
+    Returns per-run accept rates plus the reuse/scheduling accounting."""
+    stage = build_serve_stage(cfg, params, prompts, gen_len=gen_len, max_len=max_len)
+    wf = Workflow(stages=(stage,))
+    insts = wf.instantiate(list(param_sets))[stage.name]
+    tree = build_reuse_tree(stage, insts)
+    paths = 1
+    if hbm_budget_bytes is not None:
+        paths = min_active_paths(tree, hbm_budget_bytes) or 1
+    sched = rmsr_schedule(tree, paths)
+    results = execute_merged_stage(tree, {}, active_paths=paths)
+    return {
+        "accept_rate": {
+            rid: float(res["accept_rate"]) for rid, res in results.items()
+        },
+        "tasks_total": len(insts) * len(stage.tasks),
+        "tasks_executed": tree.unique_task_count(),
+        "reuse_fraction": 1.0 - tree.unique_task_count() / (len(insts) * len(stage.tasks)),
+        "active_paths": paths,
+        "peak_bytes": sched.peak_bytes,
+    }

@@ -1,0 +1,3 @@
+"""Data pipelines (deterministic, resumable, host-sharded)."""
+
+from repro.data.pipeline import TokenPipeline  # noqa: F401

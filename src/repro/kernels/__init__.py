@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots, with jnp oracles in ref.py
+and dispatching wrappers in ops.py.
+
+* ``morph_recon``      — tiled morphological reconstruction (the paper's
+                         segmentation propagation hot-spot).
+* ``flash_attention``  — blocked FlashAttention-2 (causal + sliding window +
+                         GQA) for the LM prefill path.
+* ``ssm_scan``         — chunked diagonal-gated linear recurrence for the
+                         Mamba2 / RWKV6 architectures.
+"""

@@ -1,0 +1,103 @@
+"""Jitted dispatching wrappers for the Pallas kernels.
+
+Every wrapper picks the Pallas path on TPU backends and the pure-XLA
+reference path elsewhere (this CPU container validates kernels via
+``interpret=True`` in the tests; production runs lower the real kernels).
+The choice is overridable per call for testing/benchmarking.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def morph_reconstruct(
+    marker: jax.Array,
+    mask: jax.Array,
+    *,
+    conn: int = 8,
+    use_kernel: Optional[bool] = None,
+    block: Tuple[int, int] = (256, 256),
+    inner_iters: int = 8,
+) -> jax.Array:
+    """Morphological reconstruction by dilation (see kernels/morph_recon.py)."""
+    use_kernel = _on_tpu() if use_kernel is None else use_kernel
+    if use_kernel:
+        from repro.kernels.morph_recon import morph_reconstruct_pallas
+
+        return morph_reconstruct_pallas(
+            marker,
+            mask,
+            conn=conn,
+            block=block,
+            inner_iters=inner_iters,
+            interpret=not _on_tpu(),
+        )
+    return kref.morph_reconstruct_ref(marker, mask, conn=conn)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_kernel: Optional[bool] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Blocked FlashAttention-2 (see kernels/flash_attention.py)."""
+    use_kernel = _on_tpu() if use_kernel is None else use_kernel
+    if use_kernel:
+        from repro.kernels.flash_attention import flash_attention_pallas
+
+        return flash_attention_pallas(
+            q,
+            k,
+            v,
+            causal=causal,
+            window=window,
+            block_q=block_q,
+            block_k=block_k,
+            interpret=not _on_tpu(),
+        )
+    return kref.attention_ref(q, k, v, causal=causal, window=window)
+
+
+def ssm_scan(
+    x: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    h0: Optional[jax.Array] = None,
+    *,
+    use_kernel: Optional[bool] = None,
+    chunk: int = 64,
+    analysis: bool = False,
+):
+    """Chunked diagonal-gated linear recurrence (see kernels/ssm_scan.py).
+    ``analysis=True`` swaps in a shape-preserving stub whose true cost the
+    roofline harness adds in closed form (XLA cost analysis cannot see
+    through the sequential chunk loop)."""
+    if analysis:
+        return kref.ssm_scan_stub(x, a, b, c, h0)
+    use_kernel = _on_tpu() if use_kernel is None else use_kernel
+    if use_kernel:
+        from repro.kernels.ssm_scan import ssm_scan_pallas
+
+        return ssm_scan_pallas(x, a, b, c, h0, chunk=chunk, interpret=not _on_tpu())
+    return kref.ssm_scan_xla(x, a, b, c, h0, chunk=chunk)

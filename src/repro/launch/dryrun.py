@@ -1,0 +1,255 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell and record memory / cost / collective analysis.
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+          [--mesh single|multi|both] [--out experiments/dryrun.json]
+
+The two XLA_FLAGS lines above MUST stay the first statements of this module:
+jax locks the device count at first init, and the production meshes need 512
+placeholder host devices. Smoke tests and benchmarks never import this
+module, so they keep seeing 1 device.
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, supports_long_context
+from repro.dist.sharding import (
+    cache_shardings,
+    input_shardings,
+    make_ctx,
+    param_shardings,
+)
+from repro.launch.hlo_analysis import (
+    HW,
+    collective_bytes,
+    model_flops,
+    roofline_terms,
+    ssm_scan_costs,
+)
+from repro.launch.inputs import cache_specs, input_specs, params_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.optim import OptConfig, adamw_init
+
+
+def _opt_specs(params_sds):
+    return jax.eval_shape(adamw_init, params_sds)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               cfg=None, analysis: bool = False):
+    """Build and lower one cell; returns (lowered, n_chips, aux)."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    mode = "train" if shape.kind == "train" else "serve"
+    ctx = make_ctx(mesh, mode=mode)
+    if analysis:
+        ctx = dataclasses.replace(ctx, analysis=True)
+
+    p_sds = params_specs(cfg)
+    p_sh = param_shardings(p_sds, ctx)
+    in_sds = input_specs(cfg, shape)
+    in_sp = input_shardings(cfg, shape, ctx)
+    in_sh = {k: NamedSharding(mesh, v) for k, v in in_sp.items()}
+
+    with mesh:
+        if shape.kind == "train":
+            opt_sds = _opt_specs(p_sds)
+            opt_sh = jax.tree.map(
+                lambda s, x: s if x.ndim > 0 else NamedSharding(mesh, P()),
+                param_shardings(opt_sds, ctx), opt_sds,
+            )
+            step = make_train_step(
+                cfg, ctx, OptConfig(), microbatches=int(os.environ.get("REPRO_MICROBATCHES", "1"))
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, opt_sh, in_sh),
+                out_shardings=(p_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(p_sds, opt_sds, in_sds)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, ctx, max_len=shape.seq_len)
+            c_sh_fn = cache_shardings(cfg, shape, ctx)
+            c_sds = cache_specs(cfg, shape)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, in_sh),
+                out_shardings=(None, c_sh_fn(c_sds)),
+            )
+            lowered = jitted.lower(p_sds, in_sds)
+        else:  # decode
+            step = make_decode_step(cfg, ctx)
+            c_sds = cache_specs(cfg, shape)
+            c_sh = cache_shardings(cfg, shape, ctx)(c_sds)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, in_sh, NamedSharding(mesh, P())),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(
+                p_sds, c_sds, in_sds, jax.ShapeDtypeStruct((), jnp.int32)
+            )
+    return lowered, n_chips, (cfg, shape)
+
+
+def _pattern_period(cfg) -> int:
+    return cfg.global_every or cfg.attn_every or 1
+
+
+def analysis_terms(arch: str, shape_name: str, multi_pod: bool, n_chips: int):
+    """Roofline terms from depth-p and depth-2p ANALYSIS compiles (fully
+    unrolled scans so cost analysis sees every iteration), scaled to the real
+    depth; plus the closed-form SSM-scan term (see ssm_scan_costs)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    p = _pattern_period(cfg)
+    units_real = cfg.num_layers / p
+    pts = []
+    for units in (1, 2):
+        cfg_small = dataclasses.replace(cfg, num_layers=p * units)
+        lowered, _, _ = lower_cell(
+            arch, shape_name, multi_pod, cfg=cfg_small, analysis=True
+        )
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        coll = collective_bytes(compiled.as_text())
+        pts.append(
+            (
+                float(cost.get("flops", 0.0)),
+                float(cost.get("bytes accessed", 0.0)),
+                float(coll["total"]),
+            )
+        )
+    scaled = [a + (b - a) * (units_real - 1.0) for a, b in zip(pts[0], pts[1])]
+    corr = ssm_scan_costs(cfg, shape)
+    scaled[0] += corr["flops"] / n_chips
+    scaled[1] += corr["bytes"] / n_chips
+    cost = {"flops": scaled[0], "bytes accessed": scaled[1]}
+    coll = {"total": scaled[2]}
+    return roofline_terms(cost, coll, n_chips)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> Dict[str, Any]:
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+    }
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not supports_long_context(cfg):
+        rec["status"] = "skip(full-attn)"
+        return rec
+    t0 = time.time()
+    try:
+        lowered, n_chips, (cfg, shape) = lower_cell(arch, shape_name, multi_pod)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        coll = collective_bytes(compiled.as_text())
+        if multi_pod:
+            # multi-pod pass proves the 'pod' axis shards; the roofline table
+            # (§Roofline) is single-pod only, so skip the analysis compiles
+            terms = roofline_terms(cost, coll, n_chips)
+            terms["analysis"] = "raw(loop-bodies-once)"
+        else:
+            terms = analysis_terms(arch, shape_name, multi_pod, n_chips)
+            terms["analysis"] = "depth-scaled"
+        mf = model_flops(cfg, shape, n_chips)
+        hlo_global_flops = terms["hlo_flops_per_chip"] * n_chips
+        rec.update(
+            status="ok",
+            n_chips=n_chips,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            bytes_per_device=int(
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            ),
+            arg_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+            temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+            out_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+            collectives={
+                k: v for k, v in coll.items() if k.startswith("n_") or k == "total"
+            },
+            **{k: v for k, v in terms.items()},
+            model_flops_global=mf,
+            useful_flops_ratio=(mf / hlo_global_flops) if hlo_global_flops else 0.0,
+        )
+    except Exception as e:  # noqa: BLE001 — record, keep sweeping
+        rec["status"] = f"FAIL: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    out_path = pathlib.Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    records = []
+    if out_path.exists():
+        records = json.loads(out_path.read_text())
+
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in records if r.get("status", "").startswith(("ok", "skip"))}
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "2x16x16" if mp else "16x16")
+                if key in done:
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                rec = run_cell(arch, shape, mp)
+                print(
+                    f"[dryrun] {key} -> {rec['status']}"
+                    + (
+                        f" compute={rec['compute_s']:.4f}s memory={rec['memory_s']:.4f}s"
+                        f" coll={rec['collective_s']:.4f}s dom={rec['dominant']}"
+                        f" bytes/dev={rec['bytes_per_device']/1e9:.2f}GB"
+                        if rec["status"] == "ok"
+                        else ""
+                    ),
+                    flush=True,
+                )
+                records = [r for r in records if (r["arch"], r["shape"], r["mesh"]) != key]
+                records.append(rec)
+                out_path.write_text(json.dumps(records, indent=1))
+    n_ok = sum(1 for r in records if r["status"] == "ok")
+    n_skip = sum(1 for r in records if r["status"].startswith("skip"))
+    n_fail = len(records) - n_ok - n_skip
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_fail} fail")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Roofline-term extraction from compiled AOT artifacts.
+
+``cost_analysis()`` provides per-device HLO FLOPs and bytes; collective bytes
+are NOT included there, so we parse the post-SPMD HLO text and sum the result
+shapes of every collective op. Shapes in the partitioned module are already
+per-device, so wire-bytes-per-chip = result_bytes × multiplier, where the
+multiplier accounts for the algorithm (ring all-reduce moves ~2× the payload;
+all-gather/reduce-scatter/all-to-all/permute ~1×).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops"]
+
+HW = {
+    "peak_flops": 197e12,   # bf16 per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "ici_bw": 50e9,         # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+_MULTIPLIER = {
+    "all-reduce": 2.0,          # ring: reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-chip wire bytes by collective kind, from post-SPMD HLO text."""
+    out: Dict[str, float] = {k: 0.0 for k in _MULTIPLIER}
+    count: Dict[str, int] = {k: 0 for k in _MULTIPLIER}
+    for m in _COLL_RE.finditer(hlo_text):
+        tuple_shapes, single_shape, kind = m.group(1), m.group(2), m.group(3)
+        shape_str = tuple_shapes if tuple_shapes else single_shape
+        out[kind] += _shape_bytes(shape_str) * _MULTIPLIER[kind]
+        count[kind] += 1
+    out["total"] = sum(out[k] for k in _MULTIPLIER)
+    out["ops"] = sum(count.values())
+    out.update({f"n_{k}": count[k] for k in count})
+    return out
+
+
+def roofline_terms(
+    cost: Dict[str, float], coll: Dict[str, float], n_chips: int
+) -> Dict[str, float]:
+    """Three roofline terms in seconds (per step, per chip — the SPMD program
+    is identical on every chip, so per-chip latency == step latency)."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    cterms = {
+        "compute_s": flops / HW["peak_flops"],
+        "memory_s": bytes_acc / HW["hbm_bw"],
+        "collective_s": coll["total"] / HW["ici_bw"],
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_acc,
+        "collective_bytes_per_chip": coll["total"],
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: cterms[k])
+    cterms["dominant"] = dom
+    denom = max(cterms["compute_s"], cterms["memory_s"], cterms["collective_s"])
+    cterms["roofline_fraction_compute"] = (
+        cterms["compute_s"] / denom if denom > 0 else 0.0
+    )
+    return cterms
+
+
+def ssm_scan_costs(cfg, shape) -> Dict[str, float]:
+    """Closed-form FLOPs/bytes of the chunked SSM scan (kernels/ssm_scan.py
+    algorithm) for the whole model — GLOBAL totals. The dry-run's analysis
+    compiles stub this scan out (XLA cost analysis cannot see through its
+    sequential chunk loop), so its true cost is added back here.
+
+    Only train/prefill shapes invoke the scan (decode updates state
+    directly). Train counts fwd + remat-fwd + bwd ≈ 4× fwd FLOPs.
+    """
+    if cfg.family not in ("ssm", "hybrid") or shape.kind == "decode":
+        return {"flops": 0.0, "bytes": 0.0}
+    b, s = shape.global_batch, shape.seq_len
+    h = cfg.ssm_heads
+    n = cfg.ssm_state if not cfg.rwkv else cfg.ssm_head_dim
+    p = cfg.ssm_head_dim
+    chunk = 64
+    nch = -(-s // chunk)
+    c = chunk
+    per_channel = cfg.rwkv
+    if per_channel:
+        per_chunk_flops = 5 * c * c * n + 2 * c * c * p + 4 * c * n * p + 6 * c * n
+    else:
+        per_chunk_flops = 2 * c * c * n + c * c + 2 * c * c * p + 4 * c * n * p + 6 * c * n
+    per_chunk_bytes = (4 * c * p + 3 * c * n + 2 * n * p) * 4
+    n_layers = cfg.num_layers  # all layers carry the scan in ssm/hybrid
+    factor = 4.0 if shape.kind == "train" else 1.0
+    total_flops = per_chunk_flops * nch * b * h * n_layers * factor
+    total_bytes = per_chunk_bytes * nch * b * h * n_layers * min(factor, 3.0)
+    return {"flops": float(total_flops), "bytes": float(total_bytes)}
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """Idealized model FLOPs per step (GLOBAL, all chips): 6·N_active·D for
+    training, 2·N_active·D for prefill, 2·N_active·B (+ attention cache
+    reads) for decode."""
+    n_active = cfg.active_param_count()
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        base = 6.0 * n_active * b * s
+        attn = 0.0
+        if cfg.family not in ("ssm",):
+            windows = cfg.layer_windows(s)
+            per_layer = [min(w, s) for w in windows]
+            attn = sum(
+                6.0 * 2.0 * b * s * w * cfg.num_heads * cfg.head_dim * 0.5
+                for w in per_layer
+            )
+        return base + attn
+    if shape.kind == "prefill":
+        base = 2.0 * n_active * b * s
+        attn = 0.0
+        if cfg.family != "ssm":
+            windows = cfg.layer_windows(s)
+            attn = sum(
+                2.0 * 2.0 * b * s * min(w, s) * cfg.num_heads * cfg.head_dim * 0.5
+                for w in windows
+            )
+        return base + attn
+    # decode: one token per sequence
+    base = 2.0 * n_active * b
+    attn = 0.0
+    if cfg.family != "ssm":
+        windows = cfg.layer_windows(s)
+        attn = sum(
+            2.0 * 2.0 * b * min(w, s) * cfg.num_heads * cfg.head_dim for w in windows
+        )
+    return base + attn

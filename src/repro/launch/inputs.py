@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every model input — shared by the dry-run,
+the roofline harness and the AOT tests. Weak-type-correct, shardable, no
+device allocation."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import init_cache, init_params
+
+__all__ = ["input_specs", "params_specs", "cache_specs"]
+
+S = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one step of the given kind (train/prefill/decode)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {
+                "frame_embeds": S((b, s, cfg.d_model), bf16),
+                "labels": S((b, s, cfg.num_codebooks), i32),
+            }
+        if cfg.family == "vlm":
+            st = s - cfg.num_patches
+            return {
+                "patch_embeds": S((b, cfg.num_patches, cfg.d_model), bf16),
+                "tokens": S((b, st), i32),
+                "labels": S((b, st), i32),
+            }
+        return {"tokens": S((b, s), i32), "labels": S((b, s), i32)}
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {"frame_embeds": S((b, s, cfg.d_model), bf16)}
+        if cfg.family == "vlm":
+            return {
+                "patch_embeds": S((b, cfg.num_patches, cfg.d_model), bf16),
+                "tokens": S((b, s - cfg.num_patches), i32),
+            }
+        return {"tokens": S((b, s), i32)}
+    # decode: one new token against a seq_len cache
+    if cfg.family == "audio":
+        return {"frame_embeds": S((b, 1, cfg.d_model), bf16)}
+    return {"tokens": S((b, 1), i32)}
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, shape.global_batch, max_len=shape.seq_len)
+    )

@@ -1,0 +1,42 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (importing this module never touches jax device state).
+The production pod is 16×16 = 256 chips (TPU v5e pod); multi-pod adds a
+leading 'pod' axis (2 × 256 = 512 chips). When the process exposes more
+devices than a mesh needs (the dry-run forces 512 host devices), the first
+``prod(shape)`` devices are used.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_mesh_from_devices"]
+
+
+def make_mesh_from_devices(
+    shape: Tuple[int, ...], axes: Tuple[str, ...], devices: Optional[Sequence] = None
+) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    need = int(np.prod(shape))
+    if len(devices) < need:
+        raise ValueError(
+            f"mesh {shape} needs {need} devices, only {len(devices)} available "
+            "(the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before any jax import)"
+        )
+    arr = np.array(devices[:need]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if len(jax.devices()) == int(np.prod(shape)):
+        return jax.make_mesh(shape, axes)
+    return make_mesh_from_devices(shape, axes)

@@ -1,0 +1,101 @@
+"""Step factories: the jit-able train / prefill / decode step functions that
+the launcher, the dry-run and the benchmarks all share."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ParallelCtx
+from repro.models import decode_step, forward_train, prefill
+from repro.optim import OptConfig, adamw_init, adamw_update
+
+__all__ = ["make_train_step", "make_decode_step", "make_prefill_step", "cast_for_compute"]
+
+
+def cast_for_compute(params, enable: bool = True):
+    """Cast fp32 master weight matrices to bf16 *before* the FSDP gathers —
+    the cast commutes with the at-rest sharding, so every weight all-gather
+    moves half the bytes (EXPERIMENTS.md §Perf it.2). Rank-<2 leaves (norms,
+    biases, decay vectors) stay fp32 for numerics."""
+    if not enable:
+        return params
+    return jax.tree.map(
+        lambda w: w.astype(jnp.bfloat16)
+        if (w.ndim >= 2 and w.dtype == jnp.float32)
+        else w,
+        params,
+    )
+
+
+def make_train_step(cfg: ModelConfig, ctx: Optional[ParallelCtx], opt_cfg: OptConfig,
+                    *, cast_before_gather: bool = True, microbatches: int = 1):
+    """``microbatches`` > 1 enables gradient accumulation: the global batch is
+    split on the batch axis and scanned, dividing activation memory by the
+    microbatch count at the cost of repeating the per-layer weight gathers —
+    how the big train cells fit 16 GB HBM (EXPERIMENTS.md §Perf it.5)."""
+
+    def loss_fn(p, batch):
+        return forward_train(cfg, cast_for_compute(p, cast_before_gather), batch, ctx)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mb = {
+                k: v.reshape(microbatches, v.shape[0] // microbatches, *v.shape[1:])
+                for k, v in batch.items()
+            }
+
+            def acc(carry, mbatch):
+                l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                return (
+                    carry[0] + l / microbatches,
+                    jax.tree.map(lambda a, b: a + b / microbatches, carry[1], g),
+                ), None
+
+            zero = (
+                jnp.zeros((), jnp.float32),
+                jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+            )
+            unroll = bool(ctx is not None and getattr(ctx, "analysis", False))
+            (loss, grads), _ = jax.lax.scan(acc, zero, mb, unroll=unroll)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: Optional[ParallelCtx],
+                     *, cast_before_gather: bool = True):
+    def serve_step(params, cache, batch, cur_len):
+        logits, cache = decode_step(
+            cfg, cast_for_compute(params, cast_before_gather), batch, cache, cur_len, ctx
+        )
+        if cfg.family == "audio":
+            nxt = jnp.argmax(
+                logits.reshape(logits.shape[0], cfg.num_codebooks, -1), axis=-1
+            ).astype(jnp.int32)
+        else:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: Optional[ParallelCtx], max_len: int,
+                      *, cast_before_gather: bool = True):
+    def prefill_step(params, batch):
+        logits, cache, length = prefill(
+            cfg, cast_for_compute(params, cast_before_gather), batch,
+            max_len=max_len, ctx=ctx,
+        )
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return prefill_step

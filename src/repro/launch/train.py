@@ -1,0 +1,107 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi_6b --steps 20 \
+        [--reduced] [--microbatches N] [--ckpt-dir DIR] [--mesh single|multi|none]
+
+On this CPU container use --reduced (full configs need the 256/512-chip
+meshes; the dry-run proves those compile). XLA latency-hiding/overlap flags
+for real TPU runs are recorded below and applied when backend == tpu.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+# Collective/compute overlap knobs for real TPU deployments (no-ops on CPU).
+_TPU_XLA_FLAGS = (
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true "
+    "--xla_tpu_overlap_compute_collective_tc=true "
+    "--xla_enable_async_all_gather=true"
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi_6b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default="none", choices=["none", "single", "multi"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    import jax
+
+    if jax.default_backend() == "tpu" and "xla_tpu" not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") + " " + _TPU_XLA_FLAGS
+        )
+
+    import jax.numpy as jnp
+
+    from repro.checkpoint import Checkpointer
+    from repro.configs import SHAPES, get_config, reduced_config
+    from repro.data import TokenPipeline
+    from repro.dist.sharding import make_ctx, param_shardings
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import make_train_step
+    from repro.models import init_params
+    from repro.optim import OptConfig, adamw_init
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    shape = dataclasses.replace(
+        SHAPES["train_4k"], seq_len=args.seq, global_batch=args.batch
+    )
+    mesh = None
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    ctx = make_ctx(mesh, mode="train") if mesh else None
+
+    params = init_params(cfg, jax.random.key(0))
+    opt_state = adamw_init(params)
+    pipe = TokenPipeline(cfg, shape, seed=0)
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if ckpt and ckpt.latest_step() is not None:
+        (params, opt_state), meta = ckpt.restore((params, opt_state))
+        pipe.restore(meta["pipeline"])
+        start = pipe.step
+        print(f"[train] resumed at step {start}")
+
+    opt_cfg = OptConfig(lr=args.lr, total_steps=args.steps)
+    step_fn = make_train_step(cfg, ctx, opt_cfg, microbatches=args.microbatches)
+    if mesh is not None:
+        sh = param_shardings(jax.eval_shape(lambda: params), ctx)
+        jitted = jax.jit(step_fn, in_shardings=(sh, None, None), out_shardings=(sh, None, None))
+    else:
+        jitted = jax.jit(step_fn)
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+        params, opt_state, metrics = jitted(params, opt_state, batch)
+        pipe.step = step + 1
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save_async(step + 1, (params, opt_state), metadata={"pipeline": pipe.state()})
+        if step % 5 == 0 or step + 1 == args.steps:
+            print(
+                f"[train] step {step} loss {float(metrics['loss']):.4f} "
+                f"({(time.time()-t0)/max(step-start+1,1):.2f}s/step)"
+            )
+    if ckpt:
+        ckpt.save(args.steps, (params, opt_state), metadata={"pipeline": pipe.state()})
+        ckpt.wait()
+
+
+if __name__ == "__main__":
+    main()

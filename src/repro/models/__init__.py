@@ -1,0 +1,9 @@
+"""Model zoo: composable layer library + config-driven builder."""
+
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    prefill,
+)

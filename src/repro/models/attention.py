@@ -1,0 +1,125 @@
+"""Attention for training/prefill (blocked streaming softmax) and decode
+(full-cache masked, flash-decoding style under GSPMD).
+
+Why blocked: dense S×S logits at prefill_32k would need tens of GB of
+transient memory; the lax.scan-over-key-chunks formulation keeps the
+transient at (B, H, Sq, chunk) while computing the same fp32-softmax result.
+The per-layer ``window`` may be a *traced* scalar (gemma3's local:global
+pattern scans layers with a per-layer window array), so masking is dynamic.
+
+On TPU backends the static-window cases dispatch to the Pallas
+FlashAttention-2 kernel (kernels/flash_attention.py) instead.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE
+
+__all__ = ["blocked_attention", "decode_attention"]
+
+_NEG = -1e30
+
+
+def blocked_attention(
+    q: jax.Array,           # (B, Sq, H, D)
+    k: jax.Array,           # (B, Sk, KV, D)
+    v: jax.Array,           # (B, Sk, KV, D)
+    *,
+    window,                 # int or traced scalar; full attention = Sk
+    q_offset: int = 0,      # absolute position of q[0] (prefill continuation)
+    prefix_len=0,           # bidirectional prefix (PaliGemma prefix-LM)
+    chunk: int = 1024,
+    unroll: bool = False,   # analysis mode: unroll the key-chunk scan
+) -> jax.Array:
+    """Causal (+ sliding-window / prefix-LM) attention with streaming
+    softmax over key chunks; exact fp32 accumulation."""
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    rep = h // kv
+    chunk = min(chunk, sk)
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = 1.0 / (d**0.5)
+    qpos = (jnp.arange(sq) + q_offset)[:, None]  # (Sq, 1)
+    q32 = (q * scale).astype(COMPUTE_DTYPE)
+    kc = k.reshape(b, n_chunks, chunk, kv, d)
+    vc = v.reshape(b, n_chunks, chunk, kv, d)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, c_idx = xs  # kb/vb: (B, chunk, KV, D)
+        kb = jnp.repeat(kb, rep, axis=2)
+        vb = jnp.repeat(vb, rep, axis=2)
+        logits = jnp.einsum(
+            "bqhd,bkhd->bhqk", q32, kb.astype(COMPUTE_DTYPE),
+            preferred_element_type=jnp.float32,
+        )
+        kpos = c_idx * chunk + jnp.arange(chunk)[None, :]  # (1, chunk)
+        mask = (kpos <= qpos) | (kpos < prefix_len)
+        mask &= kpos > qpos - window
+        mask &= kpos < sk  # key padding
+        logits = jnp.where(mask[None, None], logits, _NEG)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(COMPUTE_DTYPE), vb.astype(COMPUTE_DTYPE),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((b, h, sq), _NEG, jnp.float32),
+        jnp.zeros((b, h, sq), jnp.float32),
+        jnp.zeros((b, h, sq, d), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        init,
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(n_chunks)),
+        unroll=unroll,
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, Sq, H, D)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, KV, D)
+    v_cache: jax.Array,
+    cur_len,             # traced int: number of valid cache positions
+    *,
+    window,              # int or traced; full = S
+) -> jax.Array:
+    """One-token attention against the full cache. Under pjit the cache's
+    sequence dim is sharded over 'model' (and 'data' when batch==1); GSPMD
+    turns the masked softmax into the flash-decoding partial-softmax +
+    combine pattern automatically."""
+    b, _, h, d = q.shape
+    _, s, kv, _ = k_cache.shape
+    rep = h // kv
+    scale = 1.0 / (d**0.5)
+    kpos = jnp.arange(s)
+    mask = (kpos < cur_len) & (kpos >= cur_len - window)
+    # group q heads onto their kv head: h = kv * rep
+    qg = q.reshape(b, 1, kv, rep, d)
+    lg = jnp.einsum(
+        "bqgrd,bkgd->bgrqk",
+        (qg * scale).astype(COMPUTE_DTYPE),
+        k_cache.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    )  # (B, KV, rep, 1, S)
+    lg = jnp.where(mask[None, None, None, None, :], lg, _NEG)
+    p = jax.nn.softmax(lg, axis=-1).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v_cache.astype(COMPUTE_DTYPE))
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,92 @@
+"""Shared neural-net layers (functional style; params are pytrees of arrays).
+
+Conventions:
+  * params are stored fp32 ("master" precision), cast to bf16 for compute;
+  * stacked per-layer weights carry a leading L dim and are consumed by
+    ``lax.scan`` (small HLO, fast compile, weight-gather per layer — the
+    MaxText pattern);
+  * all shapes chosen so every weight dim that must shard is divisible by
+    the mesh axes (see DESIGN.md §5 and configs/base.py padded_vocab).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+__all__ = [
+    "COMPUTE_DTYPE",
+    "rms_norm",
+    "rope_frequencies",
+    "apply_rope",
+    "swiglu",
+    "dense_ffn",
+    "normal_init",
+    "cross_entropy",
+]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta))  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def dense_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    dt = COMPUTE_DTYPE
+    h = swiglu(x @ w_gate.astype(dt), x @ w_up.astype(dt))
+    return h @ w_down.astype(dt)
+
+
+def normal_init(key: jax.Array, shape: Tuple[int, ...], std: Optional[float] = None) -> jax.Array:
+    """Fan-in-scaled normal init. Fan-in is the second-to-last dim (stacked
+    per-layer weights carry leading L/E dims that must not affect scale)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    std = std if std is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(jnp.float32)
+
+
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, *, valid: Optional[jax.Array] = None,
+    vocab_size: Optional[int] = None,
+) -> jax.Array:
+    """Mean token cross-entropy in fp32. ``vocab_size`` masks padded vocab
+    entries (padded_vocab > vocab_size); ``valid`` masks positions."""
+    logits = logits.astype(jnp.float32)
+    if vocab_size is not None and vocab_size < logits.shape[-1]:
+        pad = logits.shape[-1] - vocab_size
+        neg = jnp.full((pad,), -1e9, dtype=jnp.float32)
+        logits = logits + jnp.concatenate([jnp.zeros((vocab_size,)), neg])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if valid is None:
+        return jnp.mean(nll)
+    v = valid.astype(jnp.float32)
+    return jnp.sum(nll * v) / jnp.maximum(jnp.sum(v), 1.0)

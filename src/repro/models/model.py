@@ -1,0 +1,527 @@
+"""Config-driven model builder: parameter init, train forward, prefill and
+decode for every assigned architecture family.
+
+Families and their layer stacks (all per-layer weights are stacked on a
+leading L dim and consumed by ``lax.scan`` — small HLO, O(1) compile cost in
+depth):
+
+  dense / moe / vlm / audio — pre-norm transformer blocks (GQA + RoPE +
+      SwiGLU FFN or top-k MoE). vlm prepends stub patch embeddings
+      (prefix-LM attention over the image prefix); audio consumes stub
+      EnCodec frame embeddings and emits one head per codebook.
+  hybrid (zamba2) — 9 super-blocks of 6 Mamba2 layers, with ONE weight-shared
+      attention+MLP block applied after every super-block (the zamba2
+      pattern, 54 = 9×6).
+  ssm (rwkv6) — RWKV-6 time-mix + channel-mix blocks.
+
+The ``ctx`` argument (ParallelCtx) is None on a single device; under a mesh
+it drives sharding constraints + the MoE shard_map (see dist/sharding.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import blocked_attention, decode_attention
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    apply_rope,
+    cross_entropy,
+    dense_ffn,
+    normal_init,
+    rms_norm,
+)
+from repro.models.moe import moe_ffn
+
+__all__ = ["init_params", "forward_train", "prefill", "decode_step", "init_cache"]
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _attn_params(key, cfg: ModelConfig, layers: int):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    shape = lambda *s: (layers, *s) if layers else s
+    return {
+        "wq": normal_init(ks[0], shape(d, h * hd)),
+        "wk": normal_init(ks[1], shape(d, kv * hd)),
+        "wv": normal_init(ks[2], shape(d, kv * hd)),
+        "wo": normal_init(ks[3], shape(h * hd, d), std=1.0 / np.sqrt(h * hd)),
+    }
+
+
+def _ffn_params(key, cfg: ModelConfig, layers: int):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    shape = lambda *s: (layers, *s) if layers else s
+    if cfg.num_experts:
+        e = cfg.num_experts
+        return {
+            "router": normal_init(ks[3], shape(d, e), std=0.02),
+            "w_gate": normal_init(ks[0], shape(e, d, f), std=1.0 / np.sqrt(d)),
+            "w_up": normal_init(ks[1], shape(e, d, f), std=1.0 / np.sqrt(d)),
+            "w_down": normal_init(ks[2], shape(e, f, d), std=1.0 / np.sqrt(f)),
+        }
+    return {
+        "w_gate": normal_init(ks[0], shape(d, f)),
+        "w_up": normal_init(ks[1], shape(d, f)),
+        "w_down": normal_init(ks[2], shape(f, d)),
+    }
+
+
+def _mamba_params(key, cfg: ModelConfig, layers: int):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    z = 2 * d_in + 2 * n + h
+    ks = jax.random.split(key, 3)
+    shape = lambda *s: (layers, *s) if layers else s
+    return {
+        "ln": jnp.zeros(shape(d), jnp.float32),
+        "in_proj": normal_init(ks[0], shape(d, z)),
+        "conv_w": normal_init(ks[1], shape(ssm_mod._CONV_K, d_in), std=0.5),
+        "dt_bias": jnp.zeros(shape(h), jnp.float32),
+        "a_log": jnp.zeros(shape(h), jnp.float32),
+        "d_skip": jnp.ones(shape(h), jnp.float32),
+        "norm": jnp.zeros(shape(d_in), jnp.float32),
+        "out_proj": normal_init(ks[2], shape(d_in, d)),
+    }
+
+
+def _rwkv_params(key, cfg: ModelConfig, layers: int):
+    d, f = cfg.d_model, cfg.d_ff
+    lora = 64
+    ks = jax.random.split(key, 10)
+    shape = lambda *s: (layers, *s) if layers else s
+    mu = lambda: jnp.full(shape(d), 0.5, jnp.float32)
+    return {
+        "ln1": jnp.zeros(shape(d), jnp.float32),
+        "ln2": jnp.zeros(shape(d), jnp.float32),
+        "mu_r": mu(), "mu_k": mu(), "mu_v": mu(), "mu_g": mu(), "mu_w": mu(),
+        "w_r": normal_init(ks[0], shape(d, d)),
+        "w_k": normal_init(ks[1], shape(d, d)),
+        "w_v": normal_init(ks[2], shape(d, d)),
+        "w_g": normal_init(ks[3], shape(d, d)),
+        "w0": jnp.full(shape(d), -0.6, jnp.float32),
+        "w_lora_a": normal_init(ks[4], shape(d, lora), std=0.02),
+        "w_lora_b": normal_init(ks[5], shape(lora, d), std=0.02),
+        "u": jnp.full(shape(d), 0.5, jnp.float32),
+        "ln_w": jnp.ones(shape(d), jnp.float32),
+        "ln_b": jnp.zeros(shape(d), jnp.float32),
+        "w_o": normal_init(ks[6], shape(d, d)),
+        "mu_ck": mu(), "mu_cr": mu(),
+        "w_ck": normal_init(ks[7], shape(d, f)),
+        "w_cv": normal_init(ks[8], shape(f, d)),
+        "w_cr": normal_init(ks[9], shape(d, d)),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    d, vp = cfg.d_model, cfg.padded_vocab
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {"final_norm": jnp.zeros((d,), jnp.float32)}
+    if cfg.family == "audio":
+        params["lm_head"] = normal_init(ks[1], (d, cfg.num_codebooks * vp), std=0.02)
+    else:
+        params["embed"] = normal_init(ks[0], (vp, d), std=0.02)
+        params["lm_head"] = normal_init(ks[1], (d, vp), std=0.02)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        L = cfg.num_layers
+        params["layers"] = {
+            "ln1": jnp.zeros((L, d), jnp.float32),
+            "ln2": jnp.zeros((L, d), jnp.float32),
+            **_attn_params(ks[2], cfg, L),
+            **_ffn_params(ks[3], cfg, L),
+        }
+    elif cfg.family == "hybrid":
+        nb = cfg.num_layers // cfg.attn_every  # super-blocks
+        params["mamba"] = jax.tree.map(
+            lambda x: x.reshape(nb, cfg.attn_every, *x.shape[1:]),
+            _mamba_params(ks[2], cfg, cfg.num_layers),
+        )
+        params["shared_attn"] = {
+            "ln1": jnp.zeros((d,), jnp.float32),
+            "ln2": jnp.zeros((d,), jnp.float32),
+            **_attn_params(ks[3], cfg, 0),
+            **{
+                k: v
+                for k, v in _ffn_params(ks[4], dataclasses.replace(cfg, num_experts=0), 0).items()
+            },
+        }
+    elif cfg.family == "ssm":
+        params["layers"] = _rwkv_params(ks[2], cfg, cfg.num_layers)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks (train/prefill path)
+# ---------------------------------------------------------------------------
+
+
+def _analysis(ctx) -> bool:
+    return bool(ctx is not None and getattr(ctx, "analysis", False))
+
+
+def _attn_block(x, p, cfg: ModelConfig, *, window, positions, prefix_len=0,
+                q_offset=0, ctx=None, return_kv=False):
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = COMPUTE_DTYPE
+    a = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = (a @ p["wq"].astype(dt)).reshape(b, s, h, hd)
+    k = (a @ p["wk"].astype(dt)).reshape(b, s, kv, hd)
+    v = (a @ p["wv"].astype(dt)).reshape(b, s, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    from repro.dist.sharding import constrain_qkv
+
+    q, k, v = constrain_qkv(q, k, v, ctx)
+    o = blocked_attention(
+        q, k, v, window=window, q_offset=q_offset, prefix_len=prefix_len,
+        unroll=_analysis(ctx),
+    )
+    x = x + o.reshape(b, s, h * hd) @ p["wo"].astype(dt)
+    return (x, (k, v)) if return_kv else (x, None)
+
+
+def _ffn_block(x, p, cfg: ModelConfig, ctx=None):
+    a = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.num_experts:
+        y = moe_ffn(
+            a,
+            {k: p[k] for k in ("router", "w_gate", "w_up", "w_down")},
+            k=cfg.experts_per_token,
+            capacity_factor=cfg.moe_capacity_factor,
+            ctx=ctx,
+        )
+    else:
+        y = dense_ffn(a, p["w_gate"], p["w_up"], p["w_down"])
+    return x + y
+
+
+def _transformer_stack(x, layers, cfg: ModelConfig, *, positions, windows,
+                       prefix_len=0, ctx=None, collect_kv=False):
+    """Scan the stacked transformer layers; optionally collect (k, v) per
+    layer for cache construction (prefill)."""
+
+    def body(h, xs):
+        p, window = xs
+        h, kvs = _attn_block(
+            h, p, cfg, window=window, positions=positions,
+            prefix_len=prefix_len, ctx=ctx, return_kv=collect_kv,
+        )
+        h = _ffn_block(h, p, cfg, ctx=ctx)
+        return h, kvs
+
+    wrapped = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    windows_arr = jnp.asarray(windows, jnp.int32)
+    x, kvs = jax.lax.scan(wrapped, x, (layers, windows_arr), unroll=_analysis(ctx))
+    return x, kvs
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2) stack
+# ---------------------------------------------------------------------------
+
+
+def _hybrid_stack(x, params, cfg: ModelConfig, *, positions, ctx=None):
+    shared = params["shared_attn"]
+    b, s, d = x.shape
+
+    def super_block(h, mp):
+        def inner(hh, p):
+            hh = hh + ssm_mod.mamba2_block(
+                rms_norm(hh, p["ln"], cfg.norm_eps), p, cfg, analysis=_analysis(ctx)
+            )
+            return hh, None
+
+        h, _ = jax.lax.scan(inner, h, mp, unroll=_analysis(ctx))
+        h, _ = _attn_block(
+            h, shared, cfg, window=s, positions=positions, ctx=ctx
+        )
+        h = _ffn_block(h, shared, cfg, ctx=ctx)
+        return h, None
+
+    wrapped = jax.checkpoint(super_block, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(wrapped, x, params["mamba"], unroll=_analysis(ctx))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# RWKV stack
+# ---------------------------------------------------------------------------
+
+
+def _rwkv_stack(x, layers, cfg: ModelConfig, ctx=None):
+    def body(h, p):
+        h = h + ssm_mod.rwkv6_block(
+            rms_norm(h, p["ln1"], cfg.norm_eps), p, cfg, analysis=_analysis(ctx)
+        )
+        y, _ = ssm_mod.rwkv6_channel_mix(rms_norm(h, p["ln2"], cfg.norm_eps), p)
+        return h + y, None
+
+    wrapped = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(wrapped, x, layers, unroll=_analysis(ctx))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Public forwards
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, int]:
+    """Returns (hidden (B,S,D) bf16, prefix_len)."""
+    if cfg.family == "audio":
+        return batch["frame_embeds"].astype(COMPUTE_DTYPE), 0
+    emb = params["embed"]
+    tok = jnp.take(emb, batch["tokens"], axis=0).astype(COMPUTE_DTYPE)
+    if cfg.family == "vlm":
+        patches = batch["patch_embeds"].astype(COMPUTE_DTYPE)
+        return jnp.concatenate([patches, tok], axis=1), cfg.num_patches
+    return tok, 0
+
+
+def _backbone(cfg: ModelConfig, params, x, *, positions, seq_len, prefix_len, ctx):
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        windows = cfg.layer_windows(seq_len)
+        x, _ = _transformer_stack(
+            x, params["layers"], cfg, positions=positions, windows=windows,
+            prefix_len=prefix_len, ctx=ctx,
+        )
+    elif cfg.family == "hybrid":
+        x = _hybrid_stack(x, params, cfg, positions=positions, ctx=ctx)
+    elif cfg.family == "ssm":
+        x = _rwkv_stack(x, params["layers"], cfg, ctx=ctx)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def forward_train(cfg: ModelConfig, params, batch, ctx=None) -> jax.Array:
+    """Returns mean token cross-entropy (fp32 scalar)."""
+    from repro.dist.sharding import constrain_hidden
+
+    x, prefix_len = _embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = constrain_hidden(x, cfg, ctx)
+    x = _backbone(cfg, params, x, positions=positions, seq_len=s,
+                  prefix_len=prefix_len, ctx=ctx)
+    dt = COMPUTE_DTYPE
+    if cfg.family == "audio":
+        vp = cfg.padded_vocab
+        logits = (x @ params["lm_head"].astype(dt)).reshape(
+            b, s, cfg.num_codebooks, vp
+        )
+        return cross_entropy(logits, batch["labels"], vocab_size=cfg.vocab_size)
+    logits = x @ params["lm_head"].astype(dt)
+    if cfg.family == "vlm":
+        logits = logits[:, prefix_len:]  # loss over text positions only
+    labels = batch["labels"]
+    valid = labels >= 0
+    return cross_entropy(
+        logits, jnp.maximum(labels, 0), valid=valid, vocab_size=cfg.vocab_size
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Cache pytree sized for ``max_len`` positions."""
+    hd, kv = cfg.head_dim, cfg.num_kv_heads
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        L = cfg.num_layers
+        return {
+            "k": jnp.zeros((L, batch, max_len, kv, hd), COMPUTE_DTYPE),
+            "v": jnp.zeros((L, batch, max_len, kv, hd), COMPUTE_DTYPE),
+        }
+    if cfg.family == "hybrid":
+        nb = cfg.num_layers // cfg.attn_every
+        mam = ssm_mod.mamba2_init_cache(cfg, batch, COMPUTE_DTYPE)
+        return {
+            "mamba": jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x, (nb, cfg.attn_every, *x.shape)
+                ),
+                mam,
+            ),
+            "k": jnp.zeros((nb, batch, max_len, kv, hd), COMPUTE_DTYPE),
+            "v": jnp.zeros((nb, batch, max_len, kv, hd), COMPUTE_DTYPE),
+        }
+    if cfg.family == "ssm":
+        rw = ssm_mod.rwkv6_init_cache(cfg, batch, COMPUTE_DTYPE)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers, *x.shape)), rw
+        )
+    raise ValueError(cfg.family)
+
+
+def _decode_attn_layer(x, p, cfg, kc, vc, cur_len, window, positions):
+    """One decode attention block against a (B,S,KV,hd) cache layer."""
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = COMPUTE_DTYPE
+    a = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = (a @ p["wq"].astype(dt)).reshape(b, 1, h, hd)
+    k = (a @ p["wk"].astype(dt)).reshape(b, 1, kv, hd)
+    v = (a @ p["wv"].astype(dt)).reshape(b, 1, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), cur_len, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), cur_len, axis=1)
+    o = decode_attention(q, kc, vc, cur_len + 1, window=window)
+    x = x + o.reshape(b, 1, h * hd) @ p["wo"].astype(dt)
+    return x, kc, vc
+
+
+def decode_step(cfg: ModelConfig, params, batch, cache, cur_len, ctx=None):
+    """One token for every sequence. ``batch``: {"tokens": (B, 1)} (or
+    {"frame_embeds": (B, 1, D)} for audio). Returns (logits, new_cache)."""
+    if cfg.family == "audio":
+        x = batch["frame_embeds"].astype(COMPUTE_DTYPE)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(COMPUTE_DTYPE)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(cur_len, (b, 1))
+    s_cache = jax.tree.leaves(cache)[0].shape[2] if cfg.family != "ssm" else 0
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        windows = jnp.asarray(cfg.layer_windows(10**9), jnp.int32)
+        windows = jnp.minimum(windows, jnp.int32(2**30))
+
+        def body(h, xs):
+            p, window, kc, vc = xs
+            h, kc, vc = _decode_attn_layer(h, p, cfg, kc, vc, cur_len, window, positions)
+            h = _ffn_block(h, p, cfg, ctx=ctx)
+            return h, (kc, vc)
+
+        x, (knew, vnew) = jax.lax.scan(
+            body, x, (params["layers"], windows, cache["k"], cache["v"]),
+            unroll=_analysis(ctx),
+        )
+        cache = {"k": knew, "v": vnew}
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def super_block(h, xs):
+            mp, mcache, kc, vc = xs
+
+            def inner(carry, xs2):
+                hh, _ = carry
+                p, mc = xs2
+                y, mc_new = ssm_mod.mamba2_decode(
+                    rms_norm(hh, p["ln"], cfg.norm_eps), p, cfg, mc
+                )
+                return (hh + y, 0), mc_new
+
+            (h, _), mcache_new = jax.lax.scan(inner, (h, 0), (mp, mcache))
+            h, kc, vc = _decode_attn_layer(
+                h, shared, cfg, kc, vc, cur_len, jnp.int32(2**30), positions
+            )
+            h = _ffn_block(h, shared, cfg, ctx=ctx)
+            return h, (mcache_new, kc, vc)
+
+        x, (mnew, knew, vnew) = jax.lax.scan(
+            super_block, x, (params["mamba"], cache["mamba"], cache["k"], cache["v"]),
+            unroll=_analysis(ctx),
+        )
+        cache = {"mamba": mnew, "k": knew, "v": vnew}
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            p, c = xs
+            y, c1 = ssm_mod.rwkv6_decode(
+                rms_norm(h, p["ln1"], cfg.norm_eps), p, cfg, c
+            )
+            h = h + y
+            z, cm_prev = ssm_mod.rwkv6_channel_mix(
+                rms_norm(h, p["ln2"], cfg.norm_eps), p,
+                prev=c["cm_prev"].astype(COMPUTE_DTYPE),
+            )
+            c1["cm_prev"] = cm_prev
+            return h + z, c1
+
+        x, cache = jax.lax.scan(body, x, (params["layers"], cache), unroll=_analysis(ctx))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["lm_head"].astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    return logits, cache
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int, ctx=None):
+    """Run the prompt; returns (last-position logits, filled cache, length)."""
+    from repro.dist.sharding import constrain_hidden
+
+    x, prefix_len = _embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = constrain_hidden(x, cfg, ctx)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        windows = cfg.layer_windows(s)
+        x, kvs = _transformer_stack(
+            x, params["layers"], cfg, positions=positions, windows=windows,
+            prefix_len=prefix_len, ctx=ctx, collect_kv=True,
+        )
+        k, v = kvs  # (L, B, S, KV, hd)
+        pad = max_len - s
+        cache = {
+            "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        }
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def super_block(h, mp):
+            def inner(hh, p):
+                y, c = ssm_mod.mamba2_block(
+                    rms_norm(hh, p["ln"], cfg.norm_eps), p, cfg, return_cache=True,
+                    analysis=_analysis(ctx),
+                )
+                return hh + y, c
+
+            h, mcache = jax.lax.scan(inner, h, mp, unroll=_analysis(ctx))
+            h, (k, v) = _attn_block(
+                h, shared, cfg, window=s, positions=positions, ctx=ctx,
+                return_kv=True,
+            )
+            h = _ffn_block(h, shared, cfg, ctx=ctx)
+            return h, (mcache, k, v)
+
+        x, (mcaches, ks, vs) = jax.lax.scan(
+            super_block, x, params["mamba"], unroll=_analysis(ctx)
+        )
+        pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0))
+        cache = {"mamba": mcaches, "k": jnp.pad(ks, pad), "v": jnp.pad(vs, pad)}
+    else:  # ssm (rwkv6): chunked scans already expose their final states
+
+        def body(h, p):
+            a = rms_norm(h, p["ln1"], cfg.norm_eps)
+            y, state = ssm_mod.rwkv6_block(
+                a, p, cfg, return_state=True, analysis=_analysis(ctx)
+            )
+            h = h + y
+            an = rms_norm(h, p["ln2"], cfg.norm_eps)
+            z, cm_prev = ssm_mod.rwkv6_channel_mix(an, p)
+            c = {"state": state, "tm_prev": a[:, -1], "cm_prev": cm_prev}
+            return h + z, c
+
+        x, cache = jax.lax.scan(body, x, params["layers"], unroll=_analysis(ctx))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["lm_head"].astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    return logits, cache, s

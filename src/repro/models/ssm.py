@@ -1,0 +1,235 @@
+"""State-space blocks: Mamba2 (SSD) and RWKV-6 (Finch) time mixing.
+
+Both reduce to the diagonal-gated linear recurrence implemented by
+``repro.kernels.ssm_scan`` (chunked, matmul-heavy — MXU-friendly):
+
+    h_t = a_t ⊙ h_{t-1} + b_t ⊗ x_t ;   y_t = h_t^T c_t
+
+Mamba2 uses a scalar-per-head decay a_t (broadcast over the state dim);
+RWKV-6 uses a per-channel decay (a_t of shape (..., N)) plus the
+first-occurrence bonus ``u`` readout. Decode steps update the recurrence
+state directly (O(1) per token) — this is what makes these archs eligible
+for the long_500k cell.
+
+RWKV-6 note (DESIGN.md §2): we index the decay so that h_t = w_t·h_{t-1} +
+k_t v_t (decay applied at the consuming step); this is the same recurrence
+as the paper's wkv up to a one-step reindexing of w, with the current-token
+bonus expressed as y += (u−1)⊙(r·k) v.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.layers import COMPUTE_DTYPE, rms_norm
+
+__all__ = [
+    "mamba2_block",
+    "mamba2_decode",
+    "mamba2_init_cache",
+    "rwkv6_block",
+    "rwkv6_decode",
+    "rwkv6_init_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+_CONV_K = 4
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, prev: Optional[jax.Array] = None):
+    """Depthwise causal conv, kernel _CONV_K. x: (B, S, C); w: (K, C).
+    ``prev``: (B, K-1, C) carry-in state. Returns (y, new_prev)."""
+    b, s, c = x.shape
+    if prev is None:
+        prev = jnp.zeros((b, _CONV_K - 1, c), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + s, :] * w[i][None, None, :] for i in range(_CONV_K))
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), xp[:, -( _CONV_K - 1):, :]
+
+
+def _mamba_project(x, p, cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ p["in_proj"].astype(COMPUTE_DTYPE)
+    z, xs, bc, cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(-dt * jnp.exp(p["a_log"].astype(jnp.float32)))  # (B,S,H) decay
+    return z, xs, bc, cc, dt, a
+
+
+def mamba2_block(x: jax.Array, p: Dict[str, jax.Array], cfg, *, return_cache: bool = False, analysis: bool = False):
+    """x: (B, S, D) -> (B, S, D). Train/prefill path (chunked scan).
+    ``return_cache`` also returns the final recurrence/conv state (prefill)."""
+    b, s, _ = x.shape
+    h, n, pdim = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    z, xs, bc, cc, dt, a = _mamba_project(x, p, cfg)
+    xs, conv_state = _causal_conv(xs, p["conv_w"].astype(COMPUTE_DTYPE))
+    xh = xs.reshape(b, s, h, pdim)
+    beff = bc[:, :, None, :] * dt[..., None]          # (B,S,H,N)
+    ceff = jnp.broadcast_to(cc[:, :, None, :], (b, s, h, n))
+    y, hfinal = kops.ssm_scan(
+        xh, a, beff.astype(COMPUTE_DTYPE), ceff.astype(COMPUTE_DTYPE), analysis=analysis
+    )
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, h * pdim).astype(COMPUTE_DTYPE)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(COMPUTE_DTYPE)
+    if return_cache:
+        return out, {"state": hfinal, "conv": conv_state}
+    return out
+
+
+def mamba2_init_cache(cfg, batch: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    h, n, pdim = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    d_in = cfg.ssm_expand * cfg.d_model
+    return {
+        "state": jnp.zeros((batch, h, n, pdim), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_K - 1, d_in), dtype),
+    }
+
+
+def mamba2_decode(
+    x: jax.Array, p: Dict[str, jax.Array], cfg, cache: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, 1, D); O(1) state update."""
+    b = x.shape[0]
+    h, n, pdim = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    z, xs, bc, cc, dt, a = _mamba_project(x, p, cfg)
+    xs, conv_new = _causal_conv(xs, p["conv_w"].astype(COMPUTE_DTYPE), cache["conv"])
+    xh = xs.reshape(b, 1, h, pdim)[:, 0]              # (B,H,P)
+    beff = bc[:, 0, None, :] * dt[:, 0, :, None]      # (B,H,N)
+    state = a[:, 0, :, None, None] * cache["state"] + beff[..., None] * xh[:, :, None, :].astype(jnp.float32)
+    y = jnp.einsum("bhnp,bhn->bhp", state, jnp.broadcast_to(cc[:, 0, None, :], (b, h, n)).astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, 1, h * pdim).astype(COMPUTE_DTYPE)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(COMPUTE_DTYPE), {"state": state, "conv": conv_new}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array] = None) -> jax.Array:
+    """x_{t-1} stream; ``prev`` is the carry-in last token (B, D)."""
+    if prev is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = prev[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _rwkv_mix(x, xprev, mu):
+    return x + (xprev - x) * mu.astype(x.dtype)
+
+
+def _rwkv_project(x, xprev, p, cfg):
+    b, s, d = x.shape
+    h, n = cfg.ssm_heads, cfg.ssm_head_dim
+    dt = COMPUTE_DTYPE
+    r = _rwkv_mix(x, xprev, p["mu_r"]) @ p["w_r"].astype(dt)
+    k = _rwkv_mix(x, xprev, p["mu_k"]) @ p["w_k"].astype(dt)
+    v = _rwkv_mix(x, xprev, p["mu_v"]) @ p["w_v"].astype(dt)
+    g = _rwkv_mix(x, xprev, p["mu_g"]) @ p["w_g"].astype(dt)
+    # data-dependent per-channel decay (low-rank): w in (0, 1)
+    xw = _rwkv_mix(x, xprev, p["mu_w"])
+    wlog = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["w_lora_a"].astype(dt)).astype(jnp.float32)
+        @ p["w_lora_b"].astype(jnp.float32)
+    )
+    w = jnp.exp(-jnp.exp(wlog))  # (B,S,D) per-channel decay
+    shape = (b, s, h, n)
+    return (r.reshape(shape), k.reshape(shape), v.reshape(shape), g, w.reshape(shape))
+
+
+def _rwkv_readout(r, k, v, y_scan, p, cfg, b, s):
+    """bonus + group-norm + gate + out-proj, shared by train/decode."""
+    h, n = cfg.ssm_heads, cfg.ssm_head_dim
+    u = p["u"].astype(jnp.float32).reshape(h, n)
+    bonus = jnp.einsum(
+        "bshn,bshn,bshp->bshp",
+        r.astype(jnp.float32), (u - 1.0)[None, None] * k.astype(jnp.float32),
+        v.astype(jnp.float32),
+    )
+    y = y_scan.astype(jnp.float32) + bonus
+    # per-head group norm
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = y * p["ln_w"].astype(jnp.float32).reshape(1, 1, h, n) + p["ln_b"].astype(
+        jnp.float32
+    ).reshape(1, 1, h, n)
+    return y.reshape(b, s, h * n).astype(COMPUTE_DTYPE)
+
+
+def rwkv6_block(
+    x: jax.Array, p: Dict[str, jax.Array], cfg, *, return_state: bool = False,
+    analysis: bool = False,
+):
+    """RWKV-6 time-mix, train/prefill path. x: (B, S, D)."""
+    b, s, d = x.shape
+    xprev = _token_shift(x)
+    r, k, v, g, w = _rwkv_project(x, xprev, p, cfg)
+    # recurrence: h_t = diag(w_t) h_{t-1} + k_t ⊗ v_t ; y = r·h_t
+    y_scan, hfinal = kops.ssm_scan(v, w, k, r, analysis=analysis)  # per-channel decay
+    y = _rwkv_readout(r, k, v, y_scan, p, cfg, b, s)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    out = y @ p["w_o"].astype(COMPUTE_DTYPE)
+    if return_state:
+        return out, hfinal
+    return out
+
+
+def rwkv6_init_cache(cfg, batch: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    h, n = cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "state": jnp.zeros((batch, h, n, n), jnp.float32),
+        "tm_prev": jnp.zeros((batch, cfg.d_model), dtype),
+        "cm_prev": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def rwkv6_decode(
+    x: jax.Array, p: Dict[str, jax.Array], cfg, cache: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, 1, D); O(1) per-token state update."""
+    b = x.shape[0]
+    h, n = cfg.ssm_heads, cfg.ssm_head_dim
+    xprev = cache["tm_prev"][:, None, :].astype(x.dtype)
+    r, k, v, g, w = _rwkv_project(x, xprev, p, cfg)
+    state = (
+        w[:, 0, :, :, None].astype(jnp.float32) * cache["state"]
+        + k[:, 0, :, :, None].astype(jnp.float32) * v[:, 0, :, None, :].astype(jnp.float32)
+    )
+    y_scan = jnp.einsum("bhnp,bhn->bhp", state, r[:, 0].astype(jnp.float32))[:, None]
+    y = _rwkv_readout(r, k, v, y_scan, p, cfg, b, 1)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    out = y @ p["w_o"].astype(COMPUTE_DTYPE)
+    return out, {"state": state, "tm_prev": x[:, 0], "cm_prev": cache["cm_prev"]}
+
+
+def rwkv6_channel_mix(
+    x: jax.Array, p: Dict[str, jax.Array], prev: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """RWKV FFN (channel mix). Returns (y, last_token)."""
+    dt = COMPUTE_DTYPE
+    xprev = _token_shift(x, prev)
+    xk = _rwkv_mix(x, xprev, p["mu_ck"])
+    xr = _rwkv_mix(x, xprev, p["mu_cr"])
+    kk = jnp.square(jax.nn.relu((xk @ p["w_ck"].astype(dt)).astype(jnp.float32)))
+    y = kk.astype(dt) @ p["w_cv"].astype(dt)
+    rr = jax.nn.sigmoid((xr @ p["w_cr"].astype(dt)).astype(jnp.float32)).astype(dt)
+    return rr * y, x[:, -1]

@@ -1,0 +1,3 @@
+"""Optimizers + schedules (sharded-state AdamW)."""
+
+from repro.optim.adamw import OptConfig, adamw_init, adamw_update, global_norm  # noqa: F401

@@ -1,0 +1,41 @@
+"""Elastic scaling: resume a run on a smaller (or larger) mesh.
+
+Checkpoints are mesh-agnostic (full logical arrays + manifest;
+checkpoint/checkpointer.py), and every sharding in dist/sharding.py is a
+*function of the mesh*, so after losing a pod the surviving processes:
+
+  1. rebuild a mesh from the surviving devices (make_mesh_from_devices),
+  2. re-derive param/opt shardings for the new mesh (param_shardings),
+  3. restore the checkpoint and device_put onto the new shardings,
+  4. resume the step function — recompiled for the new topology.
+
+``reshard_tree`` is the core primitive; it also serves scale-UP (new pods
+join) and mesh-shape changes (e.g. trading 'data' for 'model' when the
+per-chip memory budget changes after a down-size).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.dist.sharding import make_ctx, param_shardings
+
+__all__ = ["reshard_tree", "resume_on_mesh"]
+
+
+def reshard_tree(tree: Any, shardings: Any) -> Any:
+    """device_put a pytree onto new shardings (no-op leaves for None)."""
+    if shardings is None:
+        return tree
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+def resume_on_mesh(checkpointer, template: Any, mesh, *, mode: str = "train",
+                   step: Optional[int] = None) -> Tuple[Any, dict]:
+    """Restore the latest checkpoint and place it on ``mesh``."""
+    restored, meta = checkpointer.restore(template, step=step)
+    ctx = make_ctx(mesh, mode=mode)
+    sh = param_shardings(restored, ctx)
+    return reshard_tree(restored, sh), meta

@@ -1,0 +1,93 @@
+"""Hierarchical storage for inter-stage data objects (paper §II: RAM and
+disk tiers managed by the runtime; stages communicate by reading/writing
+data objects rather than messaging).
+
+The RAM tier is capacity-bounded; overflowing objects spill to the disk tier
+(npz files). The RMSR schedule exists precisely to keep the working set inside
+the RAM tier — the paper notes that spilling every task output of a
+fine-grain stage costs more than recomputing (§III), which is why memory-
+bounded scheduling beats a disk cache.
+"""
+
+from __future__ import annotations
+
+import collections
+import pathlib
+import tempfile
+import threading
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+__all__ = ["HierarchicalStore"]
+
+
+class HierarchicalStore:
+    def __init__(self, ram_bytes: int = 1 << 30, disk_dir: Optional[str] = None):
+        self.ram_bytes = ram_bytes
+        self._ram: "collections.OrderedDict[str, Any]" = collections.OrderedDict()
+        self._sizes: Dict[str, int] = {}
+        self._used = 0
+        self._disk = pathlib.Path(disk_dir or tempfile.mkdtemp(prefix="rtf_store_"))
+        self._disk.mkdir(parents=True, exist_ok=True)
+        self._lock = threading.Lock()
+        self.spills = 0
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def _nbytes(obj: Any) -> int:
+        if hasattr(obj, "nbytes"):
+            return int(obj.nbytes)
+        if isinstance(obj, dict):
+            return sum(HierarchicalStore._nbytes(v) for v in obj.values())
+        return 64
+
+    def put(self, key: str, obj: Any) -> None:
+        with self._lock:
+            size = self._nbytes(obj)
+            self._evict_for(size)
+            self._ram[key] = obj
+            self._ram.move_to_end(key)
+            self._sizes[key] = size
+            self._used += size
+
+    def _evict_for(self, incoming: int) -> None:
+        while self._used + incoming > self.ram_bytes and self._ram:
+            k, v = self._ram.popitem(last=False)  # LRU
+            self._used -= self._sizes.pop(k)
+            self.spills += 1
+            path = self._disk / f"{abs(hash(k))}.npz"
+            if isinstance(v, dict):
+                np.savez(path, **{kk: np.asarray(vv) for kk, vv in v.items()})
+            else:
+                np.savez(path, __value__=np.asarray(v))
+            (self._disk / f"{abs(hash(k))}.key").write_text(k)
+
+    def get(self, key: str) -> Optional[Any]:
+        with self._lock:
+            if key in self._ram:
+                self.hits += 1
+                self._ram.move_to_end(key)
+                return self._ram[key]
+            path = self._disk / f"{abs(hash(key))}.npz"
+            if path.exists():
+                self.misses += 1
+                with np.load(path) as z:
+                    if "__value__" in z:
+                        return z["__value__"]
+                    return {k: z[k] for k in z.files}
+            return None
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            if key in self._ram:
+                self._used -= self._sizes.pop(key)
+                del self._ram[key]
+            path = self._disk / f"{abs(hash(key))}.npz"
+            if path.exists():
+                path.unlink()
+
+    @property
+    def used_bytes(self) -> int:
+        return self._used

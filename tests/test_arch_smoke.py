@@ -1,0 +1,172 @@
+"""Per-architecture smoke tests: a REDUCED config of each assigned arch runs
+one forward/train step and one decode step on CPU, asserting output shapes and
+finiteness. Full configs are exercised only by the dry-run (launch/dryrun.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.models import decode_step, forward_train, init_cache, init_params, prefill
+
+B, S = 2, 32
+
+
+def make_batch(cfg, rng):
+    if cfg.family == "audio":
+        return {
+            "frame_embeds": jnp.asarray(
+                rng.normal(0, 1, (B, S, cfg.d_model)).astype(np.float32)
+            ),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S, cfg.num_codebooks))
+            ).astype(jnp.int32),
+        }
+    if cfg.family == "vlm":
+        s_text = S - cfg.num_patches
+        return {
+            "patch_embeds": jnp.asarray(
+                rng.normal(0, 1, (B, cfg.num_patches, cfg.d_model)).astype(np.float32)
+            ),
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, s_text))).astype(jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, s_text))).astype(jnp.int32),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S))).astype(jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S))).astype(jnp.int32),
+    }
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = reduced_config(get_config(request.param))
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(1)
+    return request.param, cfg, params, rng
+
+
+class TestSmoke:
+    def test_train_step_loss_finite(self, arch_setup):
+        name, cfg, params, rng = arch_setup
+        batch = make_batch(cfg, rng)
+        loss, grads = jax.value_and_grad(
+            lambda p: forward_train(cfg, p, batch)
+        )(params)
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss)), f"{name}: loss={loss}"
+        # plausible initial CE: ~log(vocab)
+        assert 0.0 < float(loss) < 2.0 * np.log(cfg.padded_vocab) + 5.0
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0.0
+
+    def test_decode_step_shapes(self, arch_setup):
+        name, cfg, params, rng = arch_setup
+        cache = init_cache(cfg, B, max_len=S)
+        if cfg.family == "audio":
+            batch = {
+                "frame_embeds": jnp.asarray(
+                    rng.normal(0, 1, (B, 1, cfg.d_model)).astype(np.float32)
+                )
+            }
+            want_v = cfg.num_codebooks * cfg.padded_vocab
+        else:
+            batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1))).astype(jnp.int32)}
+            want_v = cfg.padded_vocab
+        logits, cache2 = decode_step(cfg, params, batch, cache, jnp.int32(3))
+        assert logits.shape == (B, want_v)
+        assert bool(jnp.all(jnp.isfinite(logits))), name
+        # cache structure preserved
+        assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+        for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(cache2)):
+            assert a.shape == b.shape
+
+    def test_prefill_then_decode_consistency(self, arch_setup):
+        """prefill(t_0..t_{n-1}) followed by decode(t_n) must equal the
+        decode-only rollout of the same tokens (state equivalence)."""
+        name, cfg, params, rng = arch_setup
+        if cfg.family in ("vlm", "audio"):
+            pytest.skip("covered by token archs; stub frontends differ")
+        n = 8
+        toks = rng.integers(0, cfg.vocab_size, (B, n + 1)).astype(np.int32)
+        logits_p, cache_p, ln = prefill(
+            cfg, params, {"tokens": jnp.asarray(toks[:, :n])}, max_len=S
+        )
+        got, _ = decode_step(
+            cfg, params, {"tokens": jnp.asarray(toks[:, n : n + 1])}, cache_p, jnp.int32(n)
+        )
+        # decode-only rollout
+        cache = init_cache(cfg, B, max_len=S)
+        for i in range(n + 1):
+            want, cache = decode_step(
+                cfg, params, {"tokens": jnp.asarray(toks[:, i : i + 1])}, cache, jnp.int32(i)
+            )
+        # recurrent families carry bf16 state through S×L sequential updates;
+        # chunked-parallel vs sequential orders differ in rounding
+        tol = 0.2 if cfg.family in ("hybrid", "ssm") else 3e-2
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_full_configs_match_assignment():
+    """Exact published numbers for every assigned architecture."""
+    import repro.configs.base as base
+
+    expect = {
+        "mixtral_8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "granite_moe_1b_a400m": (24, 1024, 16, 8, 512, 49155),
+        "gemma3_1b": (26, 1152, 4, 1, 6912, 262144),
+        "phi3_medium_14b": (40, 5120, 40, 10, 17920, 100352),
+        "granite_3_8b": (40, 4096, 32, 8, 12800, 49155),
+        "yi_6b": (32, 4096, 32, 4, 11008, 64000),
+        "zamba2_2p7b": (54, 2560, 32, 32, 10240, 32000),
+        "paligemma_3b": (18, 2048, 8, 1, 16384, 257216),
+        "rwkv6_1p6b": (24, 2048, 32, 32, 7168, 65536),
+        "musicgen_medium": (48, 1536, 24, 24, 6144, 2048),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, h, kv, ff, v), arch
+    # family-specific invariants
+    assert get_config("mixtral_8x7b").num_experts == 8
+    assert get_config("mixtral_8x7b").experts_per_token == 2
+    assert get_config("mixtral_8x7b").window == 4096
+    assert get_config("granite_moe_1b_a400m").num_experts == 32
+    assert get_config("granite_moe_1b_a400m").experts_per_token == 8
+    assert get_config("gemma3_1b").global_every == 6
+    assert get_config("zamba2_2p7b").ssm_state == 64
+    assert get_config("zamba2_2p7b").attn_every == 6
+    assert get_config("rwkv6_1p6b").rwkv
+    assert get_config("musicgen_medium").num_codebooks == 4
+    assert get_config("paligemma_3b").num_patches == 256
+    # padded vocab shards over 16 for every arch
+    for arch in base.ARCH_IDS:
+        assert get_config(arch).padded_vocab % 256 == 0
+
+
+def test_param_counts_plausible():
+    """param_count() must land near the published sizes (within 25%)."""
+    approx = {
+        "mixtral_8x7b": 46.7e9,
+        "phi3_medium_14b": 14e9,
+        "granite_3_8b": 8e9,
+        "yi_6b": 6e9,
+        "zamba2_2p7b": 2.7e9,
+        "paligemma_3b": 2.6e9,   # decoder-only part of the 3B (SigLIP is a stub)
+        "rwkv6_1p6b": 1.6e9,
+        "musicgen_medium": 1.5e9,
+        "gemma3_1b": 1.0e9,
+        "granite_moe_1b_a400m": 1.3e9,
+    }
+    for arch, want in approx.items():
+        got = get_config(arch).param_count()
+        assert 0.6 * want < got < 1.6 * want, f"{arch}: {got/1e9:.2f}B vs {want/1e9:.2f}B"
+
+
+def test_moe_active_params():
+    cfg = get_config("mixtral_8x7b")
+    active = cfg.active_param_count()
+    assert 10e9 < active < 16e9  # ~12.9B active for top-2

@@ -1,0 +1,250 @@
+"""Unit + property tests for the reuse trie, RTMA bucketing and RMSR scheduling."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Param,
+    ParamSpace,
+    StageSpec,
+    TaskSpec,
+    Workflow,
+    build_reuse_tree,
+    bucket_reuse_stats,
+    execute_merged_stage,
+    halton_sequence,
+    latin_hypercube,
+    min_active_paths,
+    morris_trajectories,
+    reuse_stats,
+    rmsr_schedule,
+    rtma_buckets,
+    simulate_execution,
+    stage_level_dedup,
+    tree_peak_bytes,
+)
+
+BYTES = 100
+
+
+def make_stage(n_tasks=3, bytes_per_task=BYTES):
+    tasks = tuple(
+        TaskSpec(
+            name=f"t{i}",
+            param_names=(f"p{i}",),
+            fn=lambda x, **kw: x + sum(v for v in kw.values()),
+            cost=1.0,
+            output_bytes=bytes_per_task,
+        )
+        for i in range(n_tasks)
+    )
+    return StageSpec(name="seg", tasks=tasks)
+
+
+def make_space(n_tasks=3, card=3):
+    return ParamSpace.from_dict({f"p{i}": list(range(card)) for i in range(n_tasks)})
+
+
+def instances_for(stage, space, n, sampler="halton", seed=0):
+    if sampler == "halton":
+        pts = halton_sequence(n, space.dim)
+    else:
+        pts = latin_hypercube(n, space.dim, seed=seed)
+    sets = space.quantise(pts)
+    wf = Workflow(stages=(stage,))
+    return wf.instantiate(sets)[stage.name], sets
+
+
+class TestReuseTree:
+    def test_identical_instances_collapse(self):
+        stage = make_stage()
+        space = make_space(card=1)  # single-value grids -> all runs identical
+        insts, _ = instances_for(stage, space, 8)
+        tree = build_reuse_tree(stage, insts)
+        assert tree.unique_task_count() == len(stage.tasks)
+        stats = reuse_stats(stage, insts)
+        assert stats["reuse_fraction"] == pytest.approx(1 - 3 / 24)
+
+    def test_disjoint_instances_no_reuse(self):
+        stage = make_stage(n_tasks=1)
+        space = ParamSpace.from_dict({"p0": list(range(100))})
+        sets = [(("p0", i),) for i in range(10)]
+        wf = Workflow(stages=(stage,))
+        insts = wf.instantiate(sets)[stage.name]
+        assert reuse_stats(stage, insts)["reuse_fraction"] == 0.0
+
+    def test_prefix_sharing_counts(self):
+        stage = make_stage(n_tasks=2)
+        sets = [(("p0", 0), ("p1", 0)), (("p0", 0), ("p1", 1))]
+        wf = Workflow(stages=(stage,))
+        insts = wf.instantiate(sets)[stage.name]
+        tree = build_reuse_tree(stage, insts)
+        # shared first task + two distinct second tasks = 3 nodes, not 4
+        assert tree.unique_task_count() == 3
+
+    def test_stage_level_dedup(self):
+        stage = make_stage()
+        space = make_space(card=2)
+        insts, _ = instances_for(stage, space, 16)
+        reps, mapping = stage_level_dedup(insts)
+        assert len(reps) <= 2**3
+        assert set(mapping.keys()) == {i.run_id for i in insts}
+
+
+class TestRTMA:
+    def test_bucket_cover_exact(self):
+        stage = make_stage()
+        space = make_space()
+        insts, _ = instances_for(stage, space, 40)
+        for b in (1, 2, 4, 7, 40):
+            buckets = rtma_buckets(stage, insts, b)
+            rids = sorted(i.run_id for bk in buckets for i in bk.instances)
+            assert rids == sorted(i.run_id for i in insts)  # partition
+            assert all(len(bk.instances) <= b for bk in buckets)
+
+    def test_bigger_buckets_more_reuse(self):
+        stage = make_stage()
+        space = make_space()
+        insts, _ = instances_for(stage, space, 60)
+        fracs = []
+        for b in (1, 2, 4, 8, 60):
+            st_ = bucket_reuse_stats(stage, rtma_buckets(stage, insts, b))
+            fracs.append(st_["reuse_fraction"])
+        assert fracs == sorted(fracs)  # monotone non-decreasing
+        assert fracs[0] == 0.0
+        # full merge equals the perfect-reuse upper bound
+        assert fracs[-1] == pytest.approx(reuse_stats(stage, insts)["reuse_fraction"])
+
+
+class TestRMSR:
+    def test_depth_first_memory_constant_in_bucket_size(self):
+        """The paper's core claim: RMSR peak memory is independent of the
+        number of merged instances, while RTMA's grows with it."""
+        stage = make_stage()
+        space = make_space(card=4)
+        rtma_peaks, rmsr_peaks = [], []
+        for n in (8, 32, 64):
+            insts, _ = instances_for(stage, space, n)
+            tree = build_reuse_tree(stage, insts)
+            rtma_peaks.append(tree_peak_bytes(tree))  # breadth-eligible
+            rmsr_peaks.append(rmsr_schedule(tree, active_paths=1).peak_bytes)
+        assert rtma_peaks[-1] > rtma_peaks[0]
+        assert max(rmsr_peaks) <= 3 * BYTES + BYTES  # ≤ depth+1 buffers
+        assert rmsr_peaks[-1] <= rmsr_peaks[0] + BYTES
+
+    def test_active_paths_bounds_memory(self):
+        stage = make_stage(n_tasks=4)
+        space = make_space(n_tasks=4, card=4)
+        insts, _ = instances_for(stage, space, 64)
+        tree = build_reuse_tree(stage, insts)
+        peaks = [rmsr_schedule(tree, p).peak_bytes for p in (1, 2, 4, 8)]
+        assert peaks == sorted(peaks)
+        # P paths can hold at most ~P*(depth) buffers
+        assert peaks[0] <= 5 * BYTES
+
+    def test_min_active_paths(self):
+        stage = make_stage()
+        space = make_space(card=4)
+        insts, _ = instances_for(stage, space, 32)
+        tree = build_reuse_tree(stage, insts)
+        p = min_active_paths(tree, budget_bytes=50 * BYTES)
+        assert p is not None and p >= 1
+        assert rmsr_schedule(tree, p).peak_bytes <= 50 * BYTES
+
+    def test_schedule_is_topological_and_complete(self):
+        stage = make_stage()
+        space = make_space()
+        insts, _ = instances_for(stage, space, 25)
+        tree = build_reuse_tree(stage, insts)
+        res = rmsr_schedule(tree, active_paths=3)
+        seen = set()
+        for node in res.order:
+            if node.parent is not None and node.parent.depth >= 0:
+                assert node.parent.uid in seen
+            seen.add(node.uid)
+        assert len(res.order) == tree.unique_task_count()
+
+    def test_execute_merged_stage_matches_naive(self):
+        """Reused execution must produce bit-identical results to naive
+        per-run execution (reuse is an optimization, not an approximation)."""
+        stage = make_stage()
+        space = make_space(card=3)
+        insts, sets = instances_for(stage, space, 20)
+        tree = build_reuse_tree(stage, insts)
+        got = execute_merged_stage(tree, 0.0, active_paths=2)
+        for rid, ps in enumerate(sets):
+            want = 0.0
+            for t in stage.tasks:
+                kw = {k: v for k, v in dict(ps).items() if k in t.param_names}
+                want = t.fn(want, **kw)
+            assert got[rid] == want
+
+    def test_makespan_improves_with_paths(self):
+        stage = make_stage(n_tasks=4)
+        space = make_space(n_tasks=4, card=4)
+        insts, _ = instances_for(stage, space, 64)
+        tree = build_reuse_tree(stage, insts)
+        m1 = simulate_execution(tree, 1).makespan
+        m8 = simulate_execution(tree, 8).makespan
+        assert m8 < m1
+
+
+class TestSamplers:
+    def test_halton_in_unit_cube(self):
+        pts = halton_sequence(100, 5)
+        assert pts.shape == (100, 5)
+        assert (pts >= 0).all() and (pts < 1).all()
+
+    def test_lhs_stratification(self):
+        pts = latin_hypercube(50, 3, seed=1)
+        for j in range(3):
+            strata = np.floor(pts[:, j] * 50).astype(int)
+            assert len(set(strata.tolist())) == 50
+
+    def test_morris_one_at_a_time(self):
+        space = make_space(n_tasks=4, card=5)
+        sets, moves = morris_trajectories(space, 3, seed=0)
+        assert len(sets) == 3 * (4 + 1)
+        for traj in moves:
+            for run_idx, pname in traj:
+                prev, cur = dict(sets[run_idx - 1]), dict(sets[run_idx])
+                diff = [k for k in cur if cur[k] != prev[k]]
+                assert diff == [pname] or diff == []  # exactly one param moved
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=40),
+    b=st.integers(min_value=1, max_value=12),
+    card=st.integers(min_value=1, max_value=4),
+    n_tasks=st.integers(min_value=1, max_value=5),
+)
+def test_property_bucketing_partition_and_reuse_bounds(n, b, card, n_tasks):
+    """Invariants: RTMA partitions instances; reuse fraction within [0, upper
+    bound]; RMSR executes every unique task exactly once."""
+    stage = make_stage(n_tasks=n_tasks)
+    space = make_space(n_tasks=n_tasks, card=card)
+    insts, _ = instances_for(stage, space, n)
+    buckets = rtma_buckets(stage, insts, b)
+    rids = sorted(i.run_id for bk in buckets for i in bk.instances)
+    assert rids == list(range(n))
+    st_bucket = bucket_reuse_stats(stage, buckets)
+    st_full = reuse_stats(stage, insts)
+    assert -1e-9 <= st_bucket["reuse_fraction"] <= st_full["reuse_fraction"] + 1e-9
+    tree = build_reuse_tree(stage, insts)
+    res = rmsr_schedule(tree, active_paths=max(1, b))
+    assert len(res.order) == tree.unique_task_count()
+
+
+@settings(max_examples=20, deadline=None)
+@given(p=st.integers(min_value=1, max_value=16))
+def test_property_rmsr_peak_monotone_in_paths(p):
+    stage = make_stage(n_tasks=3)
+    space = make_space(n_tasks=3, card=3)
+    insts, _ = instances_for(stage, space, 27)
+    tree = build_reuse_tree(stage, insts)
+    r1 = rmsr_schedule(tree, p)
+    r2 = rmsr_schedule(tree, p + 1)
+    assert r2.peak_bytes >= r1.peak_bytes - 1e-9
+    assert r2.makespan <= r1.makespan + 1e-9

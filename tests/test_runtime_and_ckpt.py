@@ -1,0 +1,143 @@
+"""Runtime (Manager-Worker, fault tolerance, storage) + checkpoint tests."""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.configs import SHAPES, get_config, reduced_config
+from repro.data import TokenPipeline
+from repro.runtime import HierarchicalStore, Manager, WorkItem, simulate_cluster
+
+
+class TestManager:
+    def test_all_items_complete(self):
+        mgr = Manager()
+        for i in range(20):
+            mgr.submit(WorkItem(key=f"k{i}", fn=lambda i=i: i * i))
+        out = mgr.run(4, expected=20)
+        assert out == {f"k{i}": i * i for i in range(20)}
+
+    def test_retry_on_transient_failure(self):
+        attempts = {}
+
+        def flaky(key):
+            attempts[key] = attempts.get(key, 0) + 1
+            if attempts[key] < 3:
+                raise RuntimeError("transient")
+            return "ok"
+
+        mgr = Manager(max_attempts=5)
+        mgr.submit(WorkItem(key="a", fn=lambda: flaky("a")))
+        out = mgr.run(2, expected=1)
+        assert out["a"] == "ok"
+        assert mgr.retries == 2
+
+    def test_permanent_failure_surfaces(self):
+        mgr = Manager(max_attempts=2)
+        mgr.submit(WorkItem(key="bad", fn=lambda: 1 / 0))
+        out = mgr.run(1, expected=1)
+        assert isinstance(out["bad"], Exception)
+
+    def test_straggler_backup_task(self):
+        """A stuck item is cloned to an idle worker; first completion wins."""
+        release = threading.Event()
+
+        def slow():
+            # first attempt blocks until released; the backup returns fast
+            if not release.is_set():
+                release.set()
+                time.sleep(2.0)
+                return "slow"
+            return "fast"
+
+        mgr = Manager(straggler_factor=0.5, max_attempts=3)
+        for i in range(4):
+            mgr.submit(WorkItem(key=f"quick{i}", fn=lambda: time.sleep(0.01) or "q"))
+        mgr.submit(WorkItem(key="strag", fn=slow))
+        out = mgr.run(3, expected=5)
+        assert out["strag"] in ("fast", "slow")
+        assert mgr.backups_launched >= 1
+
+    def test_cluster_sim_efficiency_degrades_gracefully(self):
+        costs = [1.0] * 10000
+        base = simulate_cluster(costs, n_nodes=1)
+        big = simulate_cluster(costs, n_nodes=64)
+        eff = base.makespan / (big.makespan * 64)
+        assert 0.8 < eff <= 1.01
+
+
+class TestStorage:
+    def test_put_get_roundtrip(self):
+        st = HierarchicalStore(ram_bytes=1 << 20)
+        a = np.arange(100, dtype=np.float32)
+        st.put("x", a)
+        np.testing.assert_array_equal(st.get("x"), a)
+
+    def test_spill_to_disk_and_reload(self):
+        st = HierarchicalStore(ram_bytes=1000)  # tiny RAM tier
+        arrays = {f"k{i}": np.full((200,), i, np.float32) for i in range(5)}
+        for k, v in arrays.items():
+            st.put(k, v)
+        assert st.spills > 0
+        for k, v in arrays.items():
+            got = st.get(k)
+            assert got is not None
+            np.testing.assert_array_equal(np.asarray(got), v)
+
+
+class TestCheckpointer:
+    def test_roundtrip_and_resume(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        tree = {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.zeros(3)}
+        ck.save(5, tree, metadata={"pipeline": {"step": 5, "seed": 0, "host_id": 0}})
+        restored, meta = ck.restore(tree)
+        np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+        assert meta["pipeline"]["step"] == 5
+        assert ck.latest_step() == 5
+
+    def test_async_save_and_gc(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        tree = {"w": jnp.ones((4,))}
+        for s in (1, 2, 3):
+            ck.save_async(s, tree)
+        ck.wait()
+        assert ck.latest_step() == 3
+        steps = sorted(p.name for p in tmp_path.glob("step_*"))
+        assert len(steps) == 2  # keep=2 garbage collection
+
+    def test_atomic_no_partial_dirs(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, {"w": jnp.ones((2,))})
+        assert not list(tmp_path.glob("*.tmp"))
+
+
+class TestDataPipeline:
+    def test_deterministic_and_disjoint_hosts(self):
+        cfg = reduced_config(get_config("yi_6b"))
+        import dataclasses
+
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=16, global_batch=4)
+        p0 = TokenPipeline(cfg, shape, host_id=0, n_hosts=2, seed=1)
+        p1 = TokenPipeline(cfg, shape, host_id=1, n_hosts=2, seed=1)
+        b0a, b0b = p0.batch_at(3), p0.batch_at(3)
+        np.testing.assert_array_equal(b0a["tokens"], b0b["tokens"])  # deterministic
+        assert not np.array_equal(b0a["tokens"], p1.batch_at(3)["tokens"])  # disjoint
+
+    def test_state_resume(self):
+        cfg = reduced_config(get_config("yi_6b"))
+        import dataclasses
+
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=16, global_batch=4)
+        p = TokenPipeline(cfg, shape, seed=7)
+        it = iter(p)
+        next(it), next(it)
+        st = p.state()
+        want = p.batch_at(p.step)
+        p2 = TokenPipeline(cfg, shape, seed=0)
+        p2.restore(st)
+        np.testing.assert_array_equal(p2.batch_at(p2.step)["tokens"], want["tokens"])

@@ -1,0 +1,107 @@
+"""SA-over-serving reuse integration + optimizer + chunked-XLA ssm tests."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.sa_serve import build_serve_stage, run_sa_serve
+from repro.core import Workflow
+from repro.kernels.ref import ssm_scan_ref, ssm_scan_xla
+from repro.models import init_params
+from repro.optim import OptConfig, adamw_init, adamw_update
+
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    cfg = reduced_config(get_config("gemma3_1b"))
+    params = init_params(cfg, jax.random.key(1))
+    rng = np.random.default_rng(2)
+    prompts = {
+        pid: rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32)
+        for pid in range(2)
+    }
+    sets = [
+        tuple(sorted({"prompt_id": pid, "rep_penalty": rp, "top_k": tk,
+                      "threshold": th}.items()))
+        for pid, rp, tk, th in itertools.product(
+            range(2), (1.0, 1.2), (4,), (0.2, 0.4)
+        )
+    ]
+    return cfg, params, prompts, sets
+
+
+class TestSaServe:
+    def test_reuse_counts(self, serve_setup):
+        cfg, params, prompts, sets = serve_setup
+        out = run_sa_serve(cfg, params, prompts, sets, gen_len=3, max_len=24)
+        # 8 sets: 2 prefills + 4 generates + 8 scores = 14 of 24 tasks
+        assert out["tasks_total"] == 24
+        assert out["tasks_executed"] == 14
+        assert out["reuse_fraction"] > 0.4
+
+    def test_reused_equals_naive(self, serve_setup):
+        """Reuse must not change results: execute each set independently and
+        compare accept rates."""
+        cfg, params, prompts, sets = serve_setup
+        out = run_sa_serve(cfg, params, prompts, sets, gen_len=3, max_len=24)
+        stage = build_serve_stage(cfg, params, prompts, gen_len=3, max_len=24)
+        for rid, ps in enumerate(sets):
+            state = {}
+            d = dict(ps)
+            for t in stage.tasks:
+                state = t.fn(state, **{k: d[k] for k in t.param_names})
+            assert out["accept_rate"][rid] == pytest.approx(
+                float(state["accept_rate"]), abs=1e-6
+            )
+
+    def test_memory_budget_bounds_paths(self, serve_setup):
+        cfg, params, prompts, sets = serve_setup
+        stage = build_serve_stage(cfg, params, prompts, gen_len=3, max_len=24)
+        cache_b = stage.tasks[0].output_bytes
+        out = run_sa_serve(
+            cfg, params, prompts, sets, gen_len=3, max_len=24,
+            hbm_budget_bytes=3 * cache_b,
+        )
+        assert out["peak_bytes"] <= 3 * cache_b
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        params = {"x": jnp.array([3.0, -2.0])}
+        state = adamw_init(params)
+        cfg = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=1, total_steps=200)
+        loss = lambda p: jnp.sum(jnp.square(p["x"]))
+        for _ in range(150):
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw_update(g, state, params, cfg)
+        assert float(loss(params)) < 1e-2
+
+    def test_clipping_and_metrics(self):
+        params = {"x": jnp.ones(3)}
+        state = adamw_init(params)
+        cfg = OptConfig(clip_norm=0.5)
+        g = {"x": jnp.full((3,), 100.0)}
+        _, _, metrics = adamw_update(g, state, params, cfg)
+        assert float(metrics["grad_norm"]) > 100.0
+        assert float(metrics["lr"]) >= 0.0
+
+
+class TestSsmXla:
+    @pytest.mark.parametrize("per_channel", [False, True])
+    @pytest.mark.parametrize("s,chunk", [(17, 8), (64, 16), (33, 64)])
+    def test_chunked_xla_matches_ref(self, per_channel, s, chunk):
+        rng = np.random.default_rng(s + chunk)
+        b, h, n, p = 2, 2, 8, 8
+        x = jnp.asarray(rng.normal(0, 1, (b, s, h, p)).astype(np.float32))
+        a_shape = (b, s, h, n) if per_channel else (b, s, h)
+        a = jnp.asarray(np.exp(-np.exp(rng.normal(-1, 0.5, a_shape))).astype(np.float32))
+        bb = jnp.asarray(rng.normal(0, 0.5, (b, s, h, n)).astype(np.float32))
+        c = jnp.asarray(rng.normal(0, 0.5, (b, s, h, n)).astype(np.float32))
+        y_ref, h_ref = ssm_scan_ref(x, a, bb, c)
+        y, hf = ssm_scan_xla(x, a, bb, c, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(hf), np.asarray(h_ref), rtol=2e-4, atol=2e-4)
