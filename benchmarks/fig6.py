@@ -1,5 +1,6 @@
 """Fig 6 — performance benefit of reuse strategies (No reuse / Stage-level /
-multi-level RTMA) for MOAT studies of two sampling sizes.
+multi-level RTMA) for MOAT studies of two sampling sizes, planned by the
+StudyPlanner engine (one plan_study call per policy).
 
 Paper claims (640 sets): Stage ≈ 1.7×, RTMA multi-level ≈ 2.6× vs No reuse.
 """
@@ -8,10 +9,9 @@ from __future__ import annotations
 
 from typing import List
 
-from repro.app import TABLE1_SPACE
 from repro.app.pipeline import build_segmentation_stage
 
-from benchmarks.common import measure_task_costs, moat_param_sets, strategy_work_seconds
+from benchmarks.common import measure_task_costs, moat_param_sets, plan_strategy
 
 H = W = 128
 
@@ -31,11 +31,12 @@ def run(csv: List[str]) -> None:
         norm_cost = prof["normalize"]
         for n_runs in (320, 640):
             sets = moat_param_sets(n_runs, seed=1)
-            base = strategy_work_seconds(stage, norm_cost, sets, "none")
-            for strat in ("stage", "rtma"):
-                out = strategy_work_seconds(stage, norm_cost, sets, strat, max_bucket=8)
-                speedup = base["work_s"] / out["work_s"]
+            base = plan_strategy(stage, norm_cost, sets, "none")
+            for strat in ("stage", "rtma", "hybrid"):
+                plan = plan_strategy(stage, norm_cost, sets, strat, max_bucket=8)
+                speedup = base.work_seconds / plan.work_seconds
                 csv.append(
-                    f"fig6_{pname}_{strat}_n{n_runs},{out['work_s']*1e6/max(n_runs,1):.1f},"
-                    f"speedup={speedup:.2f}x_tasks={int(out['tasks'])}"
+                    f"fig6_{pname}_{strat}_n{n_runs},"
+                    f"{plan.work_seconds*1e6/max(n_runs,1):.1f},"
+                    f"speedup={speedup:.2f}x_tasks={plan.stages[1].tasks_executed}"
                 )

@@ -1,11 +1,13 @@
-"""Fig 7 — RMSR vs RTMA under memory budgets.
+"""Fig 7 — RMSR vs RTMA under memory budgets, both planned by the engine.
 
 Memory model (calibrated once, §EXPERIMENTS.md): an in-flight stage instance
 (or active RMSR path) holds ~47 fp32 image planes of working set — the value
 implied by the paper's own anchors (RTMA(2,2) on 4K×4K tiles = its 6 GB
 baseline: 2 × 47 × 4096² × 4B ≈ 6.3 GB, and Table II's (9K, 64 GB) → bucket
 4). RTMA memory is width-proportional (bucket × instance set — the paper's
-§II-B statement); RMSR memory is activePaths-proportional.
+§II-B statement); RMSR memory is activePaths-proportional. The calibrated
+bucket/path counts are passed to ``plan_study`` explicitly; makespans come
+from the plans' frozen schedules.
 
 Paper claims: RMSR(2,28) ≈ 2.8× RTMA(2,2) at 6 GB; RMSR(8,28) ≈ 1.6×
 RTMA(8,8) at 24 GB. MOAT study with 800 parameter sets (paper §IV-B).
@@ -16,7 +18,8 @@ from __future__ import annotations
 from typing import List
 
 from repro.app.pipeline import build_segmentation_stage
-from repro.core import Workflow, rtma_buckets, simulate_execution
+from repro.core import Workflow
+from repro.engine import plan_study
 
 from benchmarks.common import PLANES_PER_INSTANCE, measure_task_costs, moat_param_sets
 
@@ -30,24 +33,18 @@ def run(csv: List[str]) -> None:
         TILE, TILE, costs={k: v * scale for k, v in costs.items()}
     )
     sets = moat_param_sets(800, seed=2)
-    insts = Workflow(stages=(stage,)).instantiate(sets)[stage.name]
+    wf = Workflow(stages=(stage,))
 
     w_inst = PLANES_PER_INSTANCE * TILE * TILE * 4  # bytes per active instance/path
     for mult, y in ((1, 2), (2, 4), (4, 8)):
         budget = 2 * w_inst * mult  # 6 / 12 / 24 "GB" in the paper's units
         bx = max(1, int(budget // w_inst))  # RTMA width-proportional memory
-        rtma_time = sum(
-            simulate_execution(bk.tree(stage), y).makespan
-            for bk in rtma_buckets(stage, insts, bx)
-        )
+        rtma = plan_study(wf, sets, policy="rtma", max_bucket_size=bx, workers=y)
         # RMSR: aggressive merging (28), activePaths = y fits by construction
         # (y × w_inst ≤ budget for every configuration above)
-        rmsr_time = sum(
-            simulate_execution(bk.tree(stage), y).makespan
-            for bk in rtma_buckets(stage, insts, 28)
-        )
-        csv.append(f"fig7_mem{mult}x_RTMA({y}_{bx}),{rtma_time*1e6:.0f},baseline")
+        rmsr = plan_study(wf, sets, policy="hybrid", max_bucket_size=28, active_paths=y)
+        csv.append(f"fig7_mem{mult}x_RTMA({y}_{bx}),{rtma.makespan*1e6:.0f},baseline")
         csv.append(
-            f"fig7_mem{mult}x_RMSR({y}_28),{rmsr_time*1e6:.0f},"
-            f"speedup={rtma_time/max(rmsr_time,1e-12):.2f}x"
+            f"fig7_mem{mult}x_RMSR({y}_28),{rmsr.makespan*1e6:.0f},"
+            f"speedup={rtma.makespan/max(rmsr.makespan,1e-12):.2f}x"
         )

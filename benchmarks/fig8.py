@@ -1,9 +1,11 @@
-"""Fig 8 — multi-core and multi-node scalability.
+"""Fig 8 — multi-core and multi-node scalability, driven by the engine.
 
-(a) multi-core: RMSR makespan vs worker count on one merged stage.
+(a) multi-core: RMSR makespan vs active-path count on one merged stage
+    (a ``policy="rmsr"`` plan per worker count).
 (b) multi-node: discrete-event simulation of the Manager-Worker cluster at
-    paper scale (6,113 4K×4K tiles, 32→256 nodes × 28 cores), plus a REAL
-    multi-worker Manager run at container scale (threads, real JAX tasks).
+    paper scale (6,113 4K×4K tiles, 32→256 nodes × 28 cores) fed by the
+    hybrid plan's per-bucket makespans, plus a REAL multi-worker
+    ``execute_plan`` run at container scale (threads, real JAX tasks).
 
 Paper claim: ≈ 0.92 parallel efficiency at 256 nodes (7,168 cores).
 """
@@ -16,10 +18,10 @@ from typing import List
 import numpy as np
 
 from repro.app import synthetic_tile
-from repro.app.pipeline import build_segmentation_stage
-from repro.core import Workflow, build_reuse_tree, rtma_buckets, simulate_execution
-from repro.core.rmsr import execute_merged_stage
-from repro.runtime import Manager, WorkItem, simulate_cluster
+from repro.app.pipeline import build_segmentation_stage, build_workflow
+from repro.core import Workflow
+from repro.engine import ClusterSpec, execute_plan, plan_study
+from repro.runtime import simulate_cluster
 
 from benchmarks.common import measure_task_costs, moat_param_sets
 
@@ -29,18 +31,17 @@ def run(csv: List[str]) -> None:
     scale = (4096 / 128) ** 2
     stage = build_segmentation_stage(4096, 4096, costs={k: v * scale for k, v in costs.items()})
     sets = moat_param_sets(160, seed=4)
-    insts = Workflow(stages=(stage,)).instantiate(sets)[stage.name]
-    tree = build_reuse_tree(stage, insts)
+    wf = Workflow(stages=(stage,))
 
     # (a) multi-core scaling of one merged stage under RMSR
-    t1 = simulate_execution(tree, 1).makespan
+    t1 = plan_study(wf, sets, policy="rmsr", active_paths=1).makespan
     for w in (2, 4, 8, 16, 28):
-        tw = simulate_execution(tree, w).makespan
+        tw = plan_study(wf, sets, policy="rmsr", active_paths=w).makespan
         csv.append(f"fig8a_cores{w},{tw*1e6:.0f},speedup={t1/tw:.2f}x_ideal={w}")
 
     # (b) multi-node: 6,113 tiles × per-tile merged-stage bucket costs
-    buckets = rtma_buckets(stage, insts, 28)
-    per_bucket = [simulate_execution(b.tree(stage), 28).makespan for b in buckets]
+    plan28 = plan_study(wf, sets, policy="hybrid", max_bucket_size=28, active_paths=28)
+    per_bucket = [b.schedule.makespan for b in plan28.stages[0].buckets]
     tile_costs = []
     rng = np.random.default_rng(0)
     for _ in range(6113):
@@ -53,31 +54,21 @@ def run(csv: List[str]) -> None:
             f"fig8b_nodes{nodes},{sim.makespan*1e6:.0f},efficiency={eff:.3f}"
         )
 
-    # real multi-worker Manager run (threads, real JAX execution, small tiles)
-    tile = synthetic_tile(64, 64, seed=5)
+    # real multi-worker engine run (threads, real JAX execution, small tiles)
     import jax.numpy as jnp
-    from repro.app.pipeline import build_workflow
 
-    wf = build_workflow(64, 64)
-    norm, seg = wf.stages
-    state = norm.tasks[0].fn({"raw": jnp.asarray(tile)})
+    small_wf = build_workflow(64, 64)
+    raw = {"raw": jnp.asarray(synthetic_tile(64, 64, seed=5))}
     small_sets = moat_param_sets(32, seed=6)
-    small_insts = Workflow(stages=(seg,)).instantiate(small_sets)[seg.name]
-    small_buckets = rtma_buckets(seg, small_insts, 8)
+    small_plan = plan_study(small_wf, small_sets, policy="hybrid",
+                            max_bucket_size=8, active_paths=2)
 
-    def exec_bucket(bk):
-        return execute_merged_stage(bk.tree(seg), state, active_paths=2)
-
-    for bk in small_buckets:  # warm: jit compile every task variant
-        exec_bucket(bk)
+    execute_plan(small_plan, raw)  # warm: jit compile every task variant
 
     times = {}
     for w in (1, 2, 4):
-        mgr = Manager()
-        for i, bk in enumerate(small_buckets):
-            mgr.submit(WorkItem(key=f"b{i}", fn=lambda bk=bk: exec_bucket(bk)))
         t0 = time.perf_counter()
-        mgr.run(w, expected=len(small_buckets))
+        execute_plan(small_plan, raw, cluster=ClusterSpec(n_workers=w))
         times[w] = time.perf_counter() - t0
         csv.append(
             f"fig8real_workers{w},{times[w]*1e6:.0f},"

@@ -1,5 +1,6 @@
 """Table II — task reuse attained by RTMA vs RMSR as images grow, for 64 GB
-and 128 GB machines, on a VBD study with 8,000 parameter sets.
+and 128 GB machines, on a VBD study with 8,000 parameter sets — reuse
+accounting read off StudyPlanner plans.
 
 RTMA memory is width-proportional: bucket × (47 fp32 planes × px) — the
 calibration implied by the paper's (9K, 64 GB) → bucket 4 anchor; larger
@@ -14,8 +15,9 @@ from typing import List
 
 from repro.app import TABLE1_SPACE
 from repro.app.pipeline import build_segmentation_stage
-from repro.core import Workflow, bucket_reuse_stats, rtma_buckets
+from repro.core import Workflow
 from repro.core.sa import saltelli_sample
+from repro.engine import plan_study
 
 from benchmarks.common import PLANES_PER_INSTANCE
 
@@ -27,16 +29,16 @@ def run(csv: List[str]) -> None:
     for size_k in (9, 10, 11):
         px = size_k * 1024
         stage = build_segmentation_stage(px, px)
-        insts = Workflow(stages=(stage,)).instantiate(sets)[stage.name]
+        wf = Workflow(stages=(stage,))
         w_inst = PLANES_PER_INSTANCE * px * px * 4
         for mem_gb in (64, 128):
             b = max(1, min(10, int(mem_gb * GB // w_inst)))
-            st = bucket_reuse_stats(stage, rtma_buckets(stage, insts, b))
+            plan = plan_study(wf, sets, policy="rtma", max_bucket_size=b)
             csv.append(
                 f"table2_rtma_{size_k}K_{mem_gb}GB,0,"
-                f"bucket={b}_reuse={st['reuse_fraction']*100:.2f}%"
+                f"bucket={b}_reuse={plan.reuse_fraction*100:.2f}%"
             )
-        st = bucket_reuse_stats(stage, rtma_buckets(stage, insts, 10))
+        plan = plan_study(wf, sets, policy="hybrid", max_bucket_size=10, active_paths=1)
         csv.append(
-            f"table2_rmsr_{size_k}K_anyGB,0,bucket=10_reuse={st['reuse_fraction']*100:.2f}%"
+            f"table2_rmsr_{size_k}K_anyGB,0,bucket=10_reuse={plan.reuse_fraction*100:.2f}%"
         )

@@ -1,9 +1,12 @@
 """End-to-end driver: distributed SA study over multiple tiles.
 
-The Manager dispatches merged-stage buckets demand-driven to Workers
-(threads here; nodes in production), with straggler backup-tasks enabled.
-Compares no-reuse vs RMSR wall-clock on real JAX execution and computes
-Spearman correlations of each parameter against the Dice difference.
+A thin caller of the StudyPlanner engine: the study is planned ONCE
+(plan→bucket→schedule), then the same plan is executed on every tile, the
+Manager dispatching buckets demand-driven to Workers (threads here; nodes in
+production) with straggler backup-tasks enabled. Compares the no-reuse
+policy's planned work against the hybrid policy's real wall-clock and
+computes Spearman correlations of each parameter against the Dice
+difference.
 
     PYTHONPATH=src python examples/sa_pathology.py [--runs 48] [--tiles 2]
 """
@@ -16,16 +19,9 @@ import numpy as np
 
 from repro.app import synthetic_tile
 from repro.app.pipeline import build_workflow, TABLE1_SPACE
-from repro.core import (
-    Workflow,
-    correlation_indices,
-    dice,
-    morris_trajectories,
-    rtma_buckets,
-)
+from repro.core import correlation_indices, dice, morris_trajectories
 from repro.core.params import ParamSpace
-from repro.core.rmsr import execute_merged_stage
-from repro.runtime import Manager, run_study_distributed
+from repro.engine import ClusterSpec, execute_plan, plan_study
 
 SPACE = ParamSpace.from_dict(
     {
@@ -50,48 +46,41 @@ def main() -> None:
     sets, _ = morris_trajectories(SPACE, max(1, args.runs // (SPACE.dim + 1)), seed=3)
     sets = sets[: args.runs]
     wf = build_workflow(args.size, args.size)
-    norm, seg = wf.stages
-    ref = TABLE1_SPACE.default()
+    cluster = ClusterSpec(n_workers=args.workers, straggler_factor=4.0)
+
+    # Plan once (input-independent), execute on every tile.
+    plan = plan_study(wf, sets, cluster=cluster, policy="hybrid",
+                      max_bucket_size=len(sets), active_paths=4)
+    ref_plan = plan_study(wf, [TABLE1_SPACE.default()], policy="rmsr")
+    sub = sets[: max(4, len(sets) // 8)]
+    naive_plan = plan_study(wf, sub, policy="none")
+    print(f"plan: {plan.tasks_executed}/{plan.tasks_total} tasks "
+          f"({plan.reuse_fraction*100:.0f}% reuse) in {plan.bucket_count()} buckets")
 
     all_scores = {rid: [] for rid in range(len(sets))}
-    t_naive = t_rmsr = 0.0
+    t_hybrid = 0.0
+    n_naive = 0
+    t_naive_measured = 0.0
     for tidx in range(args.tiles):
-        tile = synthetic_tile(args.size, args.size, seed=tidx)
-        state = norm.tasks[0].fn({"raw": jnp.asarray(tile)})
-        insts = Workflow(stages=(seg,)).instantiate(list(sets))[seg.name]
+        raw = {"raw": jnp.asarray(synthetic_tile(args.size, args.size, seed=tidx))}
+        ref_mask = execute_plan(ref_plan, raw).outputs[0]["mask"]
 
-        # reference mask under default parameters
-        ref_state = state
-        d = dict(ref)
-        for t in seg.tasks:
-            ref_state = t.fn(ref_state, **{k: d[k] for k in t.param_names})
-        ref_mask = ref_state["mask"]
-
-        # naive: every instance independently
+        # naive baseline: time a subsample of independent runs, extrapolate
         t0 = time.perf_counter()
-        for inst in insts[: max(4, len(insts) // 8)]:  # subsample for timing
-            s = state
-            dd = dict(inst.params)
-            for t in seg.tasks:
-                s = t.fn(s, **{k: dd[k] for k in t.param_names})
-        t_naive += (time.perf_counter() - t0) * len(insts) / max(4, len(insts) // 8)
+        execute_plan(naive_plan, raw)
+        t_naive_measured += time.perf_counter() - t0
+        n_naive += len(sub)
 
-        # RMSR via the distributed Manager (demand-driven buckets)
-        buckets = rtma_buckets(seg, insts, len(insts))
         t0 = time.perf_counter()
-        results = run_study_distributed(
-            buckets,
-            lambda bk: execute_merged_stage(bk.tree(seg), state, active_paths=4),
-            n_workers=args.workers,
-            manager=Manager(straggler_factor=4.0),
-        )
-        t_rmsr += time.perf_counter() - t0
-        for rid, out in results.items():
+        result = execute_plan(plan, raw)
+        t_hybrid += time.perf_counter() - t0
+        for rid, out in result.outputs.items():
             all_scores[rid].append(float(dice(out["mask"], ref_mask)))
 
+    t_naive = t_naive_measured * (len(sets) * args.tiles) / max(n_naive, 1)
     mean_scores = [1.0 - float(np.mean(all_scores[r])) for r in range(len(sets))]
-    print(f"naive (est) {t_naive:.1f}s vs RMSR+Manager {t_rmsr:.1f}s "
-          f"-> {t_naive/max(t_rmsr,1e-9):.2f}x")
+    print(f"naive (est) {t_naive:.1f}s vs engine(hybrid)+Manager {t_hybrid:.1f}s "
+          f"-> {t_naive/max(t_hybrid,1e-9):.2f}x")
     corr = correlation_indices(SPACE, sets, mean_scores)
     print("top parameters by |spearman|:")
     for name, v in sorted(corr.items(), key=lambda kv: -abs(kv[1]["spearman"]))[:8]:

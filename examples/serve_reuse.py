@@ -38,14 +38,15 @@ def main() -> None:
     ]
     out = run_sa_serve(
         cfg, params, prompts, sets, gen_len=6, max_len=32,
-        hbm_budget_bytes=1 << 28,
+        hbm_budget_bytes=1 << 28, policy="rmsr",
     )
     print(
         f"{len(sets)} parameter sets -> {out['tasks_executed']}/{out['tasks_total']} "
         f"pipeline tasks executed ({out['reuse_fraction']*100:.0f}% reuse): "
         f"3 prefills, {out['tasks_executed']-3-len(sets)//1} generates deduped"
     )
-    print(f"RMSR active_paths={out['active_paths']} peak={out['peak_bytes']/1e6:.1f}MB")
+    print(f"engine(rmsr) active_paths={out['active_paths']} "
+          f"peak={out['peak_bytes']/1e6:.1f}MB")
     rates = out["accept_rate"]
     print("accept rates by (prompt, rp, top_k, thr):")
     for rid, ps in enumerate(sets[:6]):

@@ -15,27 +15,16 @@ The per-task parameter mapping is the contract the reuse trie keys on:
 
 from __future__ import annotations
 
-import functools
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.app import ops
-from repro.core import (
-    ParamSpace,
-    StageSpec,
-    TaskSpec,
-    Workflow,
-    build_reuse_tree,
-    dice,
-    execute_merged_stage,
-    rtma_buckets,
-    stage_level_dedup,
-)
+from repro.core import ParamSpace, StageSpec, TaskSpec, Workflow, dice
 from repro.core.params import ParamSet
+from repro.engine import ClusterSpec, MemoryBudget, execute_plan, plan_study
 
 __all__ = [
     "TABLE1_SPACE",
@@ -188,16 +177,8 @@ def build_workflow(h: int, w: int, costs: Optional[Dict[str, float]] = None) -> 
 
 
 # --------------------------------------------------------------------------
-# SA study driver with selectable reuse strategy.
+# SA study driver: a thin caller of the StudyPlanner engine.
 # --------------------------------------------------------------------------
-
-
-def _run_instance_naive(stage: StageSpec, state, params: ParamSet):
-    d = dict(params)
-    for t in stage.tasks:
-        kw = {k: d[k] for k in t.param_names}
-        state = t.fn(state, **kw)
-    return state
 
 
 def run_study(
@@ -206,64 +187,57 @@ def run_study(
     *,
     strategy: str = "rmsr",
     max_bucket_size: Optional[int] = None,
-    active_paths: int = 4,
+    active_paths: Optional[int] = None,
     reference_params: Optional[ParamSet] = None,
     costs: Optional[Dict[str, float]] = None,
+    n_workers: int = 1,
+    memory_budget_bytes: Optional[int] = None,
 ) -> Dict[str, Any]:
     """Execute an SA study over one tile and return per-run Dice + counters.
 
-    ``strategy`` ∈ {"none", "stage", "rtma", "rmsr"}; ``max_bucket_size``
-    bounds RTMA merging (defaults: rtma→8, rmsr→∞ i.e. one bucket, the
-    paper's headline configuration).
+    ``strategy`` is the engine's bucketing policy ∈ {"none", "stage",
+    "rtma", "rmsr", "hybrid"}; ``max_bucket_size`` bounds RTMA/hybrid
+    merging (default rtma→8; rmsr merges maximally, the paper's headline
+    configuration). ``n_workers`` dispatches buckets demand-driven through
+    the Manager.
     """
     h, w = image.shape[:2]
     wf = build_workflow(h, w, costs)
-    norm_stage, seg_stage = wf.stages
     ref_params = reference_params or TABLE1_SPACE.default()
+    memory = MemoryBudget(bytes=memory_budget_bytes)
+    cluster = ClusterSpec(n_workers=n_workers)
+    if active_paths is None and memory_budget_bytes is None:
+        active_paths = 4  # headline depth-first width when nothing to solve
 
     t0 = time.perf_counter()
-    normalized = norm_stage.tasks[0].fn({"raw": jnp.asarray(image)})
+    plan = plan_study(
+        wf,
+        list(param_sets),
+        memory=memory,
+        cluster=cluster,
+        policy=strategy,
+        max_bucket_size=max_bucket_size,
+        active_paths=active_paths,
+    )
+    raw = {"raw": jnp.asarray(image)}
+    result = execute_plan(plan, raw)
 
-    ref_mask = _run_instance_naive(seg_stage, normalized, ref_params)["mask"]
+    ref_plan = plan_study(wf, [ref_params], policy="rmsr", active_paths=1)
+    ref_mask = execute_plan(ref_plan, raw).outputs[0]["mask"]
 
-    instances = wf.instantiate(list(param_sets))[seg_stage.name]
-    tasks_total = len(instances) * len(seg_stage.tasks)
-    results: Dict[int, Any] = {}
-    tasks_executed = 0
-
-    if strategy == "none":
-        for inst in instances:
-            results[inst.run_id] = _run_instance_naive(seg_stage, normalized, inst.params)
-        tasks_executed = tasks_total
-    elif strategy == "stage":
-        reps, mapping = stage_level_dedup(instances)
-        rep_out = [_run_instance_naive(seg_stage, normalized, r.params) for r in reps]
-        tasks_executed = len(reps) * len(seg_stage.tasks)
-        for rid, ridx in mapping.items():
-            results[rid] = rep_out[ridx]
-    elif strategy in ("rtma", "rmsr"):
-        if strategy == "rtma":
-            bsize = max_bucket_size or 8
-        else:
-            bsize = max_bucket_size or len(instances)
-        buckets = rtma_buckets(seg_stage, instances, bsize)
-        for bk in buckets:
-            tree = bk.tree(seg_stage)
-            tasks_executed += tree.unique_task_count()
-            out = execute_merged_stage(tree, normalized, active_paths=active_paths)
-            results.update(out)
-    else:
-        raise ValueError(strategy)
-
-    dices = []
-    for rid in range(len(param_sets)):
-        dices.append(float(dice(results[rid]["mask"], ref_mask)))
+    dices = [
+        float(dice(result.outputs[rid]["mask"], ref_mask))
+        for rid in range(len(param_sets))
+    ]
     wall = time.perf_counter() - t0
     return {
         "dice": dices,
-        "tasks_total": tasks_total,
-        "tasks_executed": tasks_executed,
-        "reuse_fraction": 1.0 - tasks_executed / max(tasks_total, 1),
+        "tasks_total": plan.tasks_total,
+        "tasks_executed": plan.tasks_executed,
+        "reuse_fraction": plan.reuse_fraction,
+        "peak_bytes": plan.peak_bytes,
         "wall_seconds": wall,
         "reference_mask": np.asarray(ref_mask),
+        "cache_hits": result.cache_hits,
+        "plan": plan,
     }

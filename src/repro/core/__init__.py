@@ -5,6 +5,10 @@ Pipeline: sample parameter sets (``params``) → instantiate the hierarchical
 workflow (``workflow``) → stage-level dedup + reuse trie (``reuse``) → bucket
 merging (``rtma``) → memory-bounded depth-first scheduling + execution
 (``rmsr``) → difference metrics (``metrics``) → SA indices (``sa``).
+
+These are composable primitives; the composition point is
+``repro.engine.plan_study`` / ``execute_plan`` (DESIGN.md §3) — application
+code should call the engine rather than re-wiring these modules.
 """
 
 from repro.core.params import (  # noqa: F401

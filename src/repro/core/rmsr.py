@@ -36,6 +36,7 @@ __all__ = [
     "simulate_execution",
     "tree_peak_bytes",
     "min_active_paths",
+    "replay_schedule",
     "execute_merged_stage",
 ]
 
@@ -157,23 +158,108 @@ def tree_peak_bytes(tree: ReuseTree, *, discipline: str = "fifo", workers: int =
 
 def min_active_paths(tree: ReuseTree, budget_bytes: int) -> Optional[int]:
     """Largest active_paths whose RMSR peak fits the budget (None if even a
-    single path exceeds it)."""
-    best = None
-    p = 1
-    leaves = len(tree.leaves())
-    while p <= max(1, leaves):
-        res = simulate_execution(tree, p, discipline="lifo")
-        if res.peak_bytes <= budget_bytes:
-            best = p
-            p *= 2
+    single path exceeds it).
+
+    Peak bytes is monotone non-decreasing in active_paths (more concurrently
+    open root→leaf paths can only add live buffers), so a doubling probe
+    followed by a binary search over the last gap finds the exact maximum —
+    not just the last fitting power of two. active_paths beyond the leaf
+    count cannot open further paths, so the search is capped there.
+    """
+    leaves = max(1, len(tree.leaves()))
+
+    def fits(p: int) -> bool:
+        return simulate_execution(tree, p, discipline="lifo").peak_bytes <= budget_bytes
+
+    if not fits(1):
+        return None
+    lo = 1  # largest known to fit
+    hi: Optional[int] = None  # smallest known not to fit
+    probe = 2
+    while hi is None and probe < leaves:
+        if fits(probe):
+            lo = probe
+            probe *= 2
         else:
-            break
-    return best
+            hi = probe
+    if hi is None:
+        if fits(leaves):
+            return leaves
+        hi = leaves
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if fits(mid):
+            lo = mid
+        else:
+            hi = mid
+    return lo
 
 
 # ---------------------------------------------------------------------------
-# Real executor: walks the RMSR schedule calling the (jitted) task functions.
+# Real executor: walks a frozen schedule calling the (jitted) task functions.
 # ---------------------------------------------------------------------------
+
+def replay_schedule(
+    tree: ReuseTree,
+    order: Sequence[ReuseNode],
+    input_state: Any,
+    *,
+    lookup: Optional[Callable[[Tuple], Tuple[bool, Any]]] = None,
+    store: Optional[Callable[[Tuple, Any, Any, Dict[str, Any]], None]] = None,
+) -> Tuple[Dict[int, Any], int, int]:
+    """Replay a frozen schedule over a merged task tree.
+
+    Each trie node runs ``task.fn(parent_output, **bound_params)`` exactly
+    once — this *is* the computation reuse. Buffers are dropped per the
+    liveness rule (a parent output dies with its last child), so the
+    Python-side peak matches the schedule's proof.
+
+    ``lookup(path_key) -> (hit, value)`` / ``store(path_key, value, task,
+    params)`` optionally plug a result cache in (the engine's run-level
+    cache); the path key is the tuple of trie keys from the root.
+
+    Returns ``({run_id: leaf output}, tasks executed, cache hits)``.
+    """
+    outputs: Dict[int, Any] = {}
+    results: Dict[int, Any] = {}
+    remaining: Dict[int, int] = {}
+    path_keys: Dict[int, Tuple] = {}
+    executed = 0
+    hits = 0
+    for node in order:
+        task = tree.stage.tasks[node.depth]
+        parent = node.parent
+        at_root = parent is None or parent.depth < 0
+        pk = (path_keys[parent.uid] if not at_root else ()) + (node.key,)
+        path_keys[node.uid] = pk
+        params = {
+            k: v for k, v in dict(node.instances[0].params).items()
+            if k in task.param_names
+        }
+        hit = False
+        out = None
+        if lookup is not None:
+            hit, out = lookup(pk)
+        if hit:
+            hits += 1
+        else:
+            src = input_state if at_root else outputs[parent.uid]
+            out = task.fn(src, **params) if task.fn is not None else src
+            executed += 1
+            if store is not None:
+                store(pk, out, task, params)
+        if node.is_leaf:
+            for inst in node.instances:
+                results[inst.run_id] = out
+        else:
+            outputs[node.uid] = out
+            remaining[node.uid] = len(node.children)
+        if not at_root:
+            remaining[parent.uid] -= 1
+            if remaining[parent.uid] == 0:
+                del outputs[parent.uid]  # liveness: parent freed
+    return results, executed, hits
+
 
 def execute_merged_stage(
     tree: ReuseTree,
@@ -185,30 +271,9 @@ def execute_merged_stage(
     """Execute a merged stage's task tree with RMSR's depth-first order.
 
     ``input_state`` is the stage input (e.g. the normalised image tile).
-    Each trie node runs ``task.fn(parent_output, **bound_params)`` exactly
-    once — this *is* the computation reuse. Buffers are dropped per the
-    liveness rule, so the Python-side peak matches the schedule's proof.
-
     Returns {run_id: leaf output} for every merged stage instance.
     """
-    sched = rmsr_schedule(tree, active_paths)
-    outputs: Dict[int, Any] = {}
-    results: Dict[int, Any] = {}
-    remaining: Dict[int, int] = {}
-    for node in sched.order:
-        task = tree.stage.tasks[node.depth]
-        parent = node.parent
-        src = input_state if (parent is None or parent.depth < 0) else outputs[parent.uid]
-        params = {k: v for k, v in dict(node.instances[0].params).items() if k in task.param_names}
-        out = task.fn(src, **params) if task.fn is not None else src
-        if node.is_leaf:
-            for inst in node.instances:
-                results[inst.run_id] = out
-        else:
-            outputs[node.uid] = out
-            remaining[node.uid] = len(node.children)
-        if parent is not None and parent.depth >= 0:
-            remaining[parent.uid] -= 1
-            if remaining[parent.uid] == 0:
-                del outputs[parent.uid]  # liveness: parent freed
+    results, _, _ = replay_schedule(
+        tree, rmsr_schedule(tree, active_paths).order, input_state
+    )
     return results

@@ -18,8 +18,7 @@ the exact mechanism the paper uses to decouple merge size from memory.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +26,6 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.params import ParamSet
-from repro.core.reuse import build_reuse_tree
-from repro.core.rmsr import execute_merged_stage, min_active_paths, rmsr_schedule
 from repro.core.workflow import StageSpec, TaskSpec, Workflow
 from repro.models import decode_step, init_cache, prefill
 
@@ -109,26 +106,35 @@ def run_sa_serve(
     gen_len: int = 8,
     max_len: int = 64,
     hbm_budget_bytes: Optional[int] = None,
+    policy: str = "rmsr",
+    n_workers: int = 1,
 ) -> Dict[str, Any]:
-    """Execute the SA-serve study with maximal merging under a memory budget.
+    """Execute the SA-serve study through the StudyPlanner engine.
 
-    Returns per-run accept rates plus the reuse/scheduling accounting."""
+    The default ``"rmsr"`` policy merges maximally and solves activePaths
+    against the HBM budget; ``"hybrid"`` additionally buckets for
+    multi-worker dispatch. Returns per-run accept rates plus the
+    reuse/scheduling accounting."""
+    from repro.engine import ClusterSpec, MemoryBudget, execute_plan, plan_study
+
     stage = build_serve_stage(cfg, params, prompts, gen_len=gen_len, max_len=max_len)
     wf = Workflow(stages=(stage,))
-    insts = wf.instantiate(list(param_sets))[stage.name]
-    tree = build_reuse_tree(stage, insts)
-    paths = 1
-    if hbm_budget_bytes is not None:
-        paths = min_active_paths(tree, hbm_budget_bytes) or 1
-    sched = rmsr_schedule(tree, paths)
-    results = execute_merged_stage(tree, {}, active_paths=paths)
+    plan = plan_study(
+        wf,
+        list(param_sets),
+        memory=MemoryBudget(bytes=hbm_budget_bytes),
+        cluster=ClusterSpec(n_workers=n_workers),
+        policy=policy,
+    )
+    result = execute_plan(plan, {})
     return {
         "accept_rate": {
-            rid: float(res["accept_rate"]) for rid, res in results.items()
+            rid: float(res["accept_rate"]) for rid, res in result.outputs.items()
         },
-        "tasks_total": len(insts) * len(stage.tasks),
-        "tasks_executed": tree.unique_task_count(),
-        "reuse_fraction": 1.0 - tree.unique_task_count() / (len(insts) * len(stage.tasks)),
-        "active_paths": paths,
-        "peak_bytes": sched.peak_bytes,
+        "tasks_total": plan.tasks_total,
+        "tasks_executed": plan.tasks_executed,
+        "reuse_fraction": plan.reuse_fraction,
+        "active_paths": plan.active_paths,
+        "peak_bytes": plan.peak_bytes,
+        "cache_hits": result.cache_hits,
     }

@@ -1,0 +1,12 @@
+"""Distributed-execution helpers: the mesh-aware sharding layer every model
+forward, launcher and the elastic runtime share (DESIGN.md §5)."""
+
+from repro.dist.sharding import (  # noqa: F401
+    ParallelCtx,
+    cache_shardings,
+    constrain_hidden,
+    constrain_qkv,
+    input_shardings,
+    make_ctx,
+    param_shardings,
+)

@@ -1,0 +1,21 @@
+"""Unified StudyPlanner engine: one plan→bucket→schedule→dispatch pipeline
+for every SA workload (DESIGN.md §3/§4).
+
+``plan_study`` composes the paper's contributions — stage-level dedup, reuse
+trees (RTMA merging), memory-bounded AOT schedules (RMSR) — behind one
+pluggable bucketing policy, and ``execute_plan`` dispatches the planned
+buckets demand-driven through the Manager runtime with run-level result
+caching. The pathology app, the SA-over-serving workload, the examples and
+every benchmark are thin callers of these two functions.
+"""
+
+from repro.engine.types import (  # noqa: F401
+    BucketPlan,
+    ClusterSpec,
+    MemoryBudget,
+    StagePlan,
+    StudyPlan,
+    StudyResult,
+)
+from repro.engine.planner import plan_study  # noqa: F401
+from repro.engine.executor import ResultCache, execute_bucket, execute_plan  # noqa: F401

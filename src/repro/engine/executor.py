@@ -1,0 +1,166 @@
+"""execute_plan — the dispatch half of the unified StudyPlanner engine.
+
+Stages run in order (a stage is a barrier); within a stage, every bucket is
+a :class:`~repro.runtime.manager.WorkItem` dispatched demand-driven through
+the Manager (heartbeats, retries, straggler backup tasks). Leaf outputs are
+routed by ``run_id`` into the next stage's instances, so dataflow crosses
+stage boundaries without caller wiring.
+
+The run-level :class:`ResultCache` is keyed by ``(stage, upstream-group,
+trie-path)``: a retried or backup bucket replays its schedule but every
+already-computed merged prefix is a cache hit, and sibling buckets of the
+same group share prefixes the bucketing could not merge. Tasks are pure
+functions of ``(input, params)``, so cached reuse is bit-identical to
+recomputation.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.rmsr import replay_schedule
+from repro.runtime.manager import Manager, WorkItem
+from repro.engine.types import BucketPlan, ClusterSpec, StudyPlan, StudyResult
+
+__all__ = ["ResultCache", "execute_bucket", "execute_plan"]
+
+
+class ResultCache:
+    """Thread-safe LRU cache of merged-task outputs, bounded in bytes.
+
+    Entries are weighted by the task's declared ``output_bytes`` (the same
+    model the schedule's liveness proof uses); an entry larger than the cap
+    is never admitted.
+    """
+
+    def __init__(self, max_bytes: int):
+        self.max_bytes = int(max_bytes)
+        self._entries: "collections.OrderedDict[Tuple, Tuple[Any, int]]" = (
+            collections.OrderedDict()
+        )
+        self._bytes = 0
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Tuple) -> Tuple[bool, Any]:
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return True, self._entries[key][0]
+            self.misses += 1
+            return False, None
+
+    def put(self, key: Tuple, value: Any, nbytes: int) -> None:
+        nbytes = max(0, int(nbytes))
+        if nbytes > self.max_bytes:
+            return
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                return
+            self._entries[key] = (value, nbytes)
+            self._bytes += nbytes
+            while self._bytes > self.max_bytes and self._entries:
+                _, (_, b) = self._entries.popitem(last=False)
+                self._bytes -= b
+
+
+def execute_bucket(
+    bucket: BucketPlan,
+    input_state: Any,
+    cache: Optional[ResultCache] = None,
+) -> Tuple[Dict[int, Any], int, int]:
+    """Replay a bucket's frozen schedule (``rmsr.replay_schedule``) with the
+    run-level cache plugged in under the bucket's cache scope. Returns
+    ``(run_id -> leaf output, tasks executed, cache hits)``."""
+    lookup = store = None
+    if cache is not None:
+        scope = bucket.cache_scope
+
+        def lookup(pk):
+            return cache.get(scope + (pk,))
+
+        def store(pk, out, task, params):
+            cache.put(scope + (pk,), out, task.bound_bytes(params))
+
+    return replay_schedule(
+        bucket.tree, bucket.schedule.order, input_state, lookup=lookup, store=store
+    )
+
+
+def execute_plan(
+    plan: StudyPlan,
+    input_state: Any,
+    *,
+    cluster: Optional[ClusterSpec] = None,
+) -> StudyResult:
+    """Execute a :class:`StudyPlan` on one input, returning per-run outputs.
+
+    Results are bit-identical across policies and worker counts: tasks are
+    pure, every bucket replays a frozen schedule, and stage routing is keyed
+    by ``run_id`` alone.
+    """
+    cluster = cluster or plan.cluster or ClusterSpec()
+    cache = (
+        ResultCache(plan.memory.effective_cache_bytes) if plan.cache_enabled else None
+    )
+    t0 = time.perf_counter()
+
+    current: Dict[int, Any] = {rid: input_state for rid in range(plan.n_runs)}
+    total_executed = 0
+    total_hits = 0
+    total_retries = 0
+    total_backups = 0
+    per_stage_executed: List[int] = []
+    for stage_plan in plan.stages:
+        mgr = Manager(
+            max_attempts=cluster.max_attempts,
+            heartbeat_timeout=cluster.heartbeat_timeout,
+            straggler_factor=cluster.straggler_factor,
+            enable_backup_tasks=cluster.enable_backup_tasks,
+        )
+        for bi, bucket in enumerate(stage_plan.buckets):
+            inp = current[bucket.run_ids[0]]
+            mgr.submit(
+                WorkItem(
+                    key=f"{stage_plan.index}:{stage_plan.stage.name}:{bi}",
+                    fn=lambda b=bucket, s=inp: execute_bucket(b, s, cache),
+                )
+            )
+        per_bucket = mgr.run(cluster.n_workers, expected=len(stage_plan.buckets))
+        total_retries += mgr.retries
+        total_backups += mgr.backups_launched
+
+        stage_executed = 0
+        routed: Dict[int, Any] = {}
+        for value in per_bucket.values():
+            if isinstance(value, Exception):
+                raise value
+            bucket_results, executed, hits = value
+            stage_executed += executed
+            total_hits += hits
+            routed.update(bucket_results)
+        missing = set(range(plan.n_runs)) - set(routed)
+        if missing:
+            raise RuntimeError(
+                f"stage {stage_plan.stage.name!r} produced no output for "
+                f"{len(missing)} runs (first: {sorted(missing)[:5]})"
+            )
+        per_stage_executed.append(stage_executed)
+        total_executed += stage_executed
+        current = routed  # run_id-routed dataflow into the next stage
+
+    return StudyResult(
+        outputs=current,
+        tasks_executed=total_executed,
+        cache_hits=total_hits,
+        retries=total_retries,
+        backups_launched=total_backups,
+        wall_seconds=time.perf_counter() - t0,
+        per_stage_executed=per_stage_executed,
+    )

@@ -1,0 +1,198 @@
+"""Plan/result datatypes of the unified StudyPlanner engine (DESIGN.md §3).
+
+A :class:`StudyPlan` is the ahead-of-time artifact of ``plan_study``: per
+stage, per upstream-input group, a list of :class:`BucketPlan`s, each holding
+its merged reuse tree and the exact :class:`~repro.core.rmsr.ScheduleResult`
+(execution order + provable peak-bytes) the executor will follow. Because the
+schedule is computed at plan time, ``peak_bytes`` is a *proof* about the
+execution, not an estimate — the executor replays the order and frees buffers
+per the same liveness rule the accounting used.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.reuse import ReuseTree
+from repro.core.rmsr import ScheduleResult
+from repro.core.workflow import StageInstance, StageSpec, Workflow
+
+__all__ = [
+    "MemoryBudget",
+    "ClusterSpec",
+    "BucketPlan",
+    "StagePlan",
+    "StudyPlan",
+    "StudyResult",
+]
+
+POLICIES = ("none", "stage", "rtma", "rmsr", "hybrid")
+
+# Policies whose semantics include task-level (trie) reuse; only these may
+# share merged prefixes through the executor's run-level result cache —
+# caching under "none"/"stage" would silently upgrade the baselines.
+CACHING_POLICIES = ("rtma", "rmsr", "hybrid")
+
+DEFAULT_MAX_BUCKET = 8
+DEFAULT_CACHE_BYTES = 128 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryBudget:
+    """Memory constraints the planner solves against.
+
+    ``bytes``       — per-worker budget for ALL live state: schedule buffers
+                      plus the result cache. The planner sizes RTMA buckets
+                      (``max_bucket_for_budget``) and RMSR ``active_paths``
+                      (``min_active_paths``) against ``schedule_bytes`` =
+                      bytes − cache reservation, so schedule peak + cache
+                      together stay under ``bytes``.
+    ``cache_bytes`` — byte cap of the executor's run-level result cache
+                      (0 disables it). Under a finite budget the effective
+                      cap is clamped to bytes/8 so the cache can never
+                      crowd out the schedule.
+    """
+
+    bytes: Optional[int] = None
+    cache_bytes: int = DEFAULT_CACHE_BYTES
+
+    @property
+    def effective_cache_bytes(self) -> int:
+        if self.bytes is None:
+            return self.cache_bytes
+        return min(self.cache_bytes, self.bytes // 8)
+
+    @property
+    def schedule_bytes(self) -> Optional[int]:
+        """What the planner may let live buffers reach; the cache retains up
+        to ``effective_cache_bytes`` on top, keeping the total under
+        ``bytes``."""
+        if self.bytes is None:
+            return None
+        return self.bytes - self.effective_cache_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """How ``execute_plan`` dispatches buckets through the Manager."""
+
+    n_workers: int = 1
+    max_attempts: int = 3
+    heartbeat_timeout: float = 60.0
+    straggler_factor: float = 3.0
+    enable_backup_tasks: bool = True
+
+
+@dataclasses.dataclass
+class BucketPlan:
+    """One merged coarse task: a reuse tree plus its frozen schedule."""
+
+    stage_index: int
+    stage_name: str
+    group_key: Tuple[Any, ...]  # upstream-signature this bucket's input hangs on
+    instances: List[StageInstance]
+    tree: ReuseTree
+    schedule: ScheduleResult
+    active_paths: int
+    discipline: str  # "lifo" (RMSR depth-first) | "fifo" (RTMA breadth-eligible)
+
+    @property
+    def run_ids(self) -> List[int]:
+        return [i.run_id for i in self.instances]
+
+    @property
+    def cache_scope(self) -> Tuple[Any, ...]:
+        """Cache-key prefix: buckets of the same stage whose instances share
+        the same upstream outputs may share merged-prefix results."""
+        return (self.stage_index, self.stage_name, self.group_key)
+
+
+@dataclasses.dataclass
+class StagePlan:
+    stage: StageSpec
+    index: int
+    buckets: List[BucketPlan]
+    tasks_total: int
+
+    @property
+    def tasks_executed(self) -> int:
+        return sum(b.tree.unique_task_count() for b in self.buckets)
+
+    @property
+    def peak_bytes(self) -> int:
+        return max((b.schedule.peak_bytes for b in self.buckets), default=0)
+
+    @property
+    def work_seconds(self) -> float:
+        return sum(b.schedule.total_cost for b in self.buckets)
+
+    @property
+    def makespan(self) -> float:
+        return sum(b.schedule.makespan for b in self.buckets)
+
+
+@dataclasses.dataclass
+class StudyPlan:
+    workflow: Workflow
+    n_runs: int
+    policy: str
+    stages: List[StagePlan]
+    memory: MemoryBudget
+    cluster: Optional[ClusterSpec] = None
+
+    @property
+    def tasks_total(self) -> int:
+        return sum(s.tasks_total for s in self.stages)
+
+    @property
+    def tasks_executed(self) -> int:
+        return sum(s.tasks_executed for s in self.stages)
+
+    @property
+    def reuse_fraction(self) -> float:
+        total = self.tasks_total
+        return 1.0 - self.tasks_executed / total if total else 0.0
+
+    @property
+    def peak_bytes(self) -> int:
+        """Peak live bytes of any single in-flight bucket — the per-worker
+        guarantee. With W concurrent workers the node-level peak is bounded
+        by the sum of the W largest bucket peaks."""
+        return max((s.peak_bytes for s in self.stages), default=0)
+
+    @property
+    def active_paths(self) -> int:
+        return max((b.active_paths for s in self.stages for b in s.buckets), default=1)
+
+    @property
+    def work_seconds(self) -> float:
+        return sum(s.work_seconds for s in self.stages)
+
+    @property
+    def makespan(self) -> float:
+        """Single-worker serial makespan model (buckets back-to-back); the
+        cluster-level model lives in runtime.simulator."""
+        return sum(s.makespan for s in self.stages)
+
+    @property
+    def cache_enabled(self) -> bool:
+        return self.policy in CACHING_POLICIES and self.memory.effective_cache_bytes > 0
+
+    def bucket_count(self) -> int:
+        return sum(len(s.buckets) for s in self.stages)
+
+
+@dataclasses.dataclass
+class StudyResult:
+    """Outputs of ``execute_plan``: final-stage state per run, plus the
+    actual execution accounting (may differ from the plan's when the result
+    cache absorbs retries/backup tasks or cross-bucket shared prefixes)."""
+
+    outputs: Dict[int, Any]
+    tasks_executed: int
+    cache_hits: int
+    retries: int
+    backups_launched: int
+    wall_seconds: float
+    per_stage_executed: List[int] = dataclasses.field(default_factory=list)

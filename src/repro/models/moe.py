@@ -134,10 +134,11 @@ def moe_ffn(
         )
         return y.reshape(bl, sl, d)
 
-    return jax.shard_map(
+    from repro.dist.sharding import shard_map_compat
+
+    return shard_map_compat(
         local,
         mesh=mesh,
         in_specs=(xspec,) + wspec,
         out_specs=xspec,
-        check_vma=False,
     )(x, rw, wg, wu, wd)

@@ -51,6 +51,7 @@ class Manager:
         self._queue: "queue.Queue[WorkItem]" = queue.Queue()
         self._results: Dict[str, Any] = {}
         self._running: Dict[str, WorkItem] = {}
+        self._attempt_seq: Dict[str, int] = {}  # highest attempt # issued per key
         self._durations: List[float] = []
         self._lock = threading.Lock()
         self.max_attempts = max_attempts
@@ -65,34 +66,57 @@ class Manager:
 
     # ------------------------------------------------------------------
     def _next(self, worker_id: int) -> Optional[WorkItem]:
-        try:
-            item = self._queue.get_nowait()
-        except queue.Empty:
-            item = self._maybe_backup()
-            if item is None:
-                return None
+        # Dequeue and lease registration are atomic under one lock: a peer
+        # observing (queue empty, no leases) under that lock can therefore
+        # conclude the system is idle — there is no window where an item has
+        # left the queue but is not yet visible in ``_running``. Items whose
+        # key already has a result (a raced retry/backup) are dropped here,
+        # before any lease exists, so they can never leak one.
         with self._lock:
+            while True:
+                try:
+                    item = self._queue.get_nowait()
+                except queue.Empty:
+                    item = self._maybe_backup_locked()
+                    if item is None:
+                        return None
+                    break
+                if item.key not in self._results:
+                    break
             item.started_at = time.monotonic()
             item.worker = worker_id
-            item.attempts += 1
+            # attempt numbers are issued centrally so concurrent attempts of
+            # one key (original + backup) always hold distinct leases
+            item.attempts = self._attempt_seq.get(item.key, 0) + 1
+            self._attempt_seq[item.key] = item.attempts
             self._running[f"{item.key}#{item.attempts}"] = item
         return item
 
-    def _maybe_backup(self) -> Optional[WorkItem]:
-        """Clone the longest-running bucket if it looks like a straggler."""
+    def _maybe_backup_locked(self) -> Optional[WorkItem]:
+        """Clone the longest-running bucket if it looks like a straggler.
+        Caller holds ``self._lock``. At most one backup of a key is in
+        flight at a time: while original + clone both run, the key holds two
+        leases and is skipped."""
         if not self.enable_backup_tasks:
             return None
-        with self._lock:
-            if not self._running or len(self._durations) < 2:
-                return None
-            median = sorted(self._durations)[len(self._durations) // 2]
-            now = time.monotonic()
-            worst = max(self._running.values(), key=lambda it: now - (it.started_at or now))
-            age = now - (worst.started_at or now)
-            if age > self.straggler_factor * max(median, 1e-3) and worst.key not in self._results:
-                if worst.attempts < self.max_attempts:
-                    self.backups_launched += 1
-                    return WorkItem(key=worst.key, fn=worst.fn, attempts=worst.attempts)
+        if not self._running or len(self._durations) < 2:
+            return None
+        median = sorted(self._durations)[len(self._durations) // 2]
+        now = time.monotonic()
+        candidates = [
+            it
+            for it in self._running.values()
+            if it.key not in self._results
+            and sum(1 for other in self._running.values() if other.key == it.key) < 2
+            and self._attempt_seq.get(it.key, 0) < self.max_attempts
+        ]
+        if not candidates:
+            return None
+        worst = max(candidates, key=lambda it: now - (it.started_at or now))
+        age = now - (worst.started_at or now)
+        if age > self.straggler_factor * max(median, 1e-3):
+            self.backups_launched += 1
+            return WorkItem(key=worst.key, fn=worst.fn)
         return None
 
     def _complete(self, item: WorkItem, result: Any) -> None:
@@ -104,13 +128,15 @@ class Manager:
                     self._durations.append(time.monotonic() - item.started_at)
 
     def _fail(self, item: WorkItem, err: Exception) -> None:
+        # Lease release and re-enqueue happen under one lock so peers never
+        # observe (queue empty, no leases) while a retry is still in flight.
         with self._lock:
             self._running.pop(f"{item.key}#{item.attempts}", None)
-        if item.attempts < self.max_attempts:
-            self.retries += 1
-            self.submit(WorkItem(key=item.key, fn=item.fn, attempts=item.attempts))
-        else:
-            with self._lock:
+            if item.attempts < self.max_attempts:
+                self.retries += 1
+                # attempt numbers are issued by _next at lease time
+                self._queue.put(WorkItem(key=item.key, fn=item.fn))
+            else:
                 self._results[item.key] = err
 
     # ------------------------------------------------------------------
@@ -124,15 +150,21 @@ class Manager:
                         return
                 item = self._next(worker_id)
                 if item is None:
+                    # Re-check emptiness and leases under ONE lock
+                    # acquisition: because _next/_fail keep dequeue and
+                    # lease state atomic, (empty queue, no leases) here
+                    # proves no work exists or can reappear.
                     with self._lock:
                         done = len(self._results) >= expected
-                        idle = not self._running
+                        idle = self._queue.empty() and not self._running
                     if done or idle:
                         return
                     time.sleep(0.005)
                     continue
                 if item.key in self._results:
-                    continue  # backup raced a completed bucket
+                    with self._lock:  # bucket completed after we leased: release
+                        self._running.pop(f"{item.key}#{item.attempts}", None)
+                    continue
                 try:
                     self._complete(item, item.fn())
                 except Exception as e:  # noqa: BLE001 — retry path

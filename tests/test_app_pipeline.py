@@ -9,8 +9,10 @@ import pytest
 
 from repro.app import TABLE1_SPACE, run_study, synthetic_tile
 from repro.app import ops
+from repro.app.pipeline import build_workflow
 from repro.core import halton_sequence, moat_indices, morris_trajectories
 from repro.core.params import ParamSpace
+from repro.engine import ClusterSpec, execute_plan, plan_study
 
 import jax.numpy as jnp
 
@@ -110,6 +112,36 @@ class TestStudy:
         ref = TABLE1_SPACE.default()
         out = run_study(tile, [ref], strategy="none")
         assert out["dice"][0] == pytest.approx(1.0)
+
+    def test_engine_acceptance_64_sets(self, tile):
+        """ISSUE acceptance: for ≥64 param sets, hybrid's planned peak_bytes
+        ≤ rtma's at equal bucket size, hybrid's tasks_executed ≤ the
+        per-bucket RTMA count, and execute_plan outputs are bit-identical
+        across the three policies and across n_workers ∈ {1, 4}."""
+        h, w = tile.shape[:2]
+        wf = build_workflow(h, w)
+        pts = halton_sequence(64, SMALL_SPACE.dim)
+        sets = SMALL_SPACE.quantise(pts)
+        plans = {
+            pol: plan_study(wf, sets, policy=pol, max_bucket_size=8, active_paths=2)
+            for pol in ("rtma", "rmsr", "hybrid")
+        }
+        assert plans["hybrid"].peak_bytes <= plans["rtma"].peak_bytes
+        assert plans["hybrid"].tasks_executed <= plans["rtma"].tasks_executed
+
+        raw = {"raw": jnp.asarray(tile)}
+        masks = {}
+        for pol, plan in plans.items():
+            for workers in (1, 4):
+                res = execute_plan(plan, raw, cluster=ClusterSpec(n_workers=workers))
+                masks[(pol, workers)] = {
+                    rid: np.asarray(out["mask"]) for rid, out in res.outputs.items()
+                }
+        base = masks[("rtma", 1)]
+        assert set(base) == set(range(64))
+        for key, got in masks.items():
+            for rid in range(64):
+                np.testing.assert_array_equal(got[rid], base[rid], err_msg=str((key, rid)))
 
     def test_moat_end_to_end(self, tile):
         """MOAT screening over a reduced space; reuse must be high because

@@ -3,6 +3,7 @@ hypothesis property tests, run in interpret mode on CPU."""
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis; skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
