@@ -8,6 +8,7 @@ counts on the reuse trie — the same accounting the paper uses.
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List, Sequence
 
@@ -20,6 +21,11 @@ from repro.app.pipeline import build_workflow
 from repro.core import StageSpec, TaskSpec, Workflow, morris_trajectories
 from repro.core.params import ParamSet, ParamSpace
 from repro.engine import MemoryBudget, StudyPlan, plan_study
+
+# CI smoke mode (REPRO_BENCH_SMOKE=1): modules shrink tile sizes / run
+# counts so the full pipeline (plan → execute → JSON artifact) exercises in
+# seconds; numbers are NOT comparable across smoke and full runs.
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
 
 
 def measure_task_costs(h: int = 128, w: int = 128, *, repeats: int = 2) -> Dict[str, float]:

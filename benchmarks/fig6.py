@@ -11,9 +11,10 @@ from typing import List
 
 from repro.app.pipeline import build_segmentation_stage
 
-from benchmarks.common import measure_task_costs, moat_param_sets, plan_strategy
+from benchmarks.common import SMOKE, measure_task_costs, moat_param_sets, plan_strategy
 
-H = W = 128
+H = W = 64 if SMOKE else 128
+SIZES = (64, 128) if SMOKE else (320, 640)
 
 
 def run(csv: List[str]) -> None:
@@ -29,7 +30,7 @@ def run(csv: List[str]) -> None:
             H, W, costs={k: v for k, v in prof.items()}
         )
         norm_cost = prof["normalize"]
-        for n_runs in (320, 640):
+        for n_runs in SIZES:
             sets = moat_param_sets(n_runs, seed=1)
             base = plan_strategy(stage, norm_cost, sets, "none")
             for strat in ("stage", "rtma", "hybrid"):

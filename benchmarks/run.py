@@ -1,8 +1,14 @@
 """Benchmark harness — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV lines (plus the roofline summary if a
-dry-run JSON is present).
+dry-run JSON is present), and writes one machine-readable
+``BENCH_<module>.json`` artifact per executed module next to the CSV
+(``--out-dir``, default CWD) so the perf trajectory accumulates run over
+run. A failed module still produces its artifact (``"ok": false`` + the
+traceback) and makes the harness exit non-zero after the remaining modules
+finish.
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,table2,fig8]
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,table2,fig8,streaming]
+     [--out-dir DIR]   (REPRO_BENCH_SMOKE=1 shrinks sizes for CI smoke runs)
 """
 
 from __future__ import annotations
@@ -16,26 +22,66 @@ import traceback
 from typing import List
 
 
+def _rows_to_json(rows: List[str]) -> List[dict]:
+    out = []
+    for row in rows:
+        name, us, derived = (row.split(",", 2) + ["", ""])[:3]
+        try:
+            us_val: object = float(us)
+        except ValueError:
+            us_val = us
+        out.append({"name": name, "us_per_call": us_val, "derived": derived})
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, help="comma list: fig6,fig7,table2,fig8")
+    ap.add_argument(
+        "--only", default=None, help="comma list: fig6,fig7,table2,fig8,streaming"
+    )
+    ap.add_argument(
+        "--out-dir", default=".", help="where BENCH_<module>.json artifacts land"
+    )
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only else None
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
 
-    from benchmarks import fig6, fig7, fig8, table2
+    from benchmarks import fig6, fig7, fig8, streaming, table2
 
-    modules = {"fig6": fig6, "fig7": fig7, "table2": table2, "fig8": fig8}
+    modules = {
+        "fig6": fig6,
+        "fig7": fig7,
+        "table2": table2,
+        "fig8": fig8,
+        "streaming": streaming,
+    }
+    if wanted:
+        unknown = wanted - set(modules) - {"roofline"}
+        if unknown:
+            ap.error(f"unknown modules in --only: {sorted(unknown)}")
     csv: List[str] = ["name,us_per_call,derived"]
+    failed: List[str] = []
     for name, mod in modules.items():
         if wanted and name not in wanted:
             continue
         t0 = time.time()
+        start = len(csv)
+        payload = {"module": name, "ok": True}
         try:
             mod.run(csv)
             print(f"# {name}: ok ({time.time()-t0:.1f}s)", file=sys.stderr)
         except Exception:  # noqa: BLE001
-            print(f"# {name}: FAILED\n{traceback.format_exc()}", file=sys.stderr)
+            err = traceback.format_exc()
+            print(f"# {name}: FAILED\n{err}", file=sys.stderr)
             csv.append(f"{name}_FAILED,0,error")
+            payload.update(ok=False, error=err)
+            failed.append(name)
+        payload.update(
+            seconds=round(time.time() - t0, 3),
+            rows=_rows_to_json(csv[start:]),
+        )
+        (out_dir / f"BENCH_{name}.json").write_text(json.dumps(payload, indent=1))
 
     # roofline summary from the dry-run, when present
     dj = pathlib.Path("experiments/dryrun.json")
@@ -51,6 +97,9 @@ def main() -> None:
                 f"_useful={r.get('useful_flops_ratio', 0):.2f}"
             )
     print("\n".join(csv))
+    if failed:
+        print(f"# failing modules: {','.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

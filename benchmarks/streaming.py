@@ -1,0 +1,115 @@
+"""Streaming dataset executor benchmark (DESIGN.md §10) — the perf
+trajectory's first machine-readable series (``BENCH_streaming.json``).
+
+Two measurements:
+
+(1) **real** — a multi-tile study on small tiles with real JAX tasks:
+    K sequential ``execute_plan`` calls (one Manager session per call)
+    versus one ``execute_study`` over the same tiles (one persistent
+    session, per-tile stage edges), at 1/2/4 Workers. Reports wall-clock,
+    throughput, parallel efficiency and the Manager-session count.
+
+(2) **paper scale** — the discrete-event streaming model
+    (``runtime.simulate_stream``) fed by the hybrid plan's frozen per-stage
+    bucket makespans (measured JAX costs scaled to 4K×4K tiles), 6,113
+    tiles at 32→256 nodes × 28 cores, streaming vs the pre-streaming
+    global stage barrier. Paper claim: ≈0.92 efficiency at 256 nodes.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.app import synthetic_tile
+from repro.app.pipeline import build_segmentation_stage, build_workflow
+from repro.core import Workflow
+from repro.engine import ClusterSpec, execute_plan, execute_study, plan_study
+from repro.runtime import simulate_stream
+from repro.runtime.manager import Manager
+
+from benchmarks.common import SMOKE, measure_task_costs, moat_param_sets
+
+TILE = 4096  # paper §IV-B whole-slide tile size
+N_TILES_PAPER = 200 if SMOKE else 6113
+
+
+def run(csv: List[str]) -> None:
+    # ---------------- (1) real streaming execution, container scale ------
+    size = 48 if SMOKE else 64
+    n_tiles = 3 if SMOKE else 6
+    n_runs = 16 if SMOKE else 32
+    wf = build_workflow(size, size)
+    sets = moat_param_sets(n_runs, seed=7)
+    plan = plan_study(wf, sets, policy="hybrid", max_bucket_size=8, active_paths=2)
+    tiles = [
+        {"raw": jnp.asarray(synthetic_tile(size, size, seed=t))}
+        for t in range(n_tiles)
+    ]
+
+    execute_plan(plan, tiles[0])  # warm: jit compile every task variant
+
+    t0 = time.perf_counter()
+    sessions0 = Manager.sessions_started
+    seq_outputs = [execute_plan(plan, tile).outputs for tile in tiles]
+    t_seq = time.perf_counter() - t0
+    seq_sessions = Manager.sessions_started - sessions0
+    csv.append(
+        f"streaming_real_sequential,{t_seq*1e6/n_tiles:.0f},"
+        f"tiles={n_tiles}_sessions={seq_sessions}"
+    )
+
+    for w in (1, 2, 4):
+        t0 = time.perf_counter()
+        sessions0 = Manager.sessions_started
+        stream = execute_study(plan, tiles, cluster=ClusterSpec(n_workers=w))
+        dt = time.perf_counter() - t0
+        assert Manager.sessions_started - sessions0 == 1
+        for i in range(n_tiles):  # bit-identical to sequential per-tile runs
+            for rid in range(n_runs):
+                assert np.array_equal(
+                    np.asarray(stream.outputs[i][rid]["mask"]),
+                    np.asarray(seq_outputs[i][rid]["mask"]),
+                )
+        csv.append(
+            f"streaming_real_workers{w},{dt*1e6/n_tiles:.0f},"
+            f"throughput={stream.throughput:.2f}tiles_s"
+            f"_eff={stream.parallel_efficiency:.2f}"
+            f"_speedup_vs_seq={t_seq/max(dt,1e-9):.2f}x_sessions=1"
+        )
+
+    # ---------------- (2) paper-scale streaming simulation ---------------
+    mh = 64 if SMOKE else 128
+    costs = measure_task_costs(mh, mh)
+    scale = (TILE / mh) ** 2
+    seg = build_segmentation_stage(
+        TILE, TILE, costs={k: v * scale for k, v in costs.items()}
+    )
+    sim_sets = moat_param_sets(40 if SMOKE else 160, seed=4)
+    sim_plan = plan_study(
+        Workflow(stages=(seg,)), sim_sets,
+        policy="hybrid", max_bucket_size=28, active_paths=28,
+    )
+    stage_bucket_costs = [
+        [b.schedule.makespan for b in sp.buckets] for sp in sim_plan.stages
+    ]
+    # normalization as a cheap parameter-free front stage, per DESIGN §10
+    stage_bucket_costs.insert(0, [costs["normalize"] * scale])
+
+    nodes_list = (32, 256) if SMOKE else (32, 64, 128, 256)
+    for nodes in nodes_list:
+        sim = simulate_stream(
+            stage_bucket_costs, N_TILES_PAPER, n_nodes=nodes, seed=0
+        )
+        bar = simulate_stream(
+            stage_bucket_costs, N_TILES_PAPER, n_nodes=nodes, seed=0, barrier=True
+        )
+        csv.append(
+            f"streaming_sim_nodes{nodes},{sim.makespan*1e6:.0f},"
+            f"eff={sim.parallel_efficiency:.3f}"
+            f"_tput={sim.throughput:.2f}tiles_s"
+            f"_vs_barrier={bar.makespan/max(sim.makespan,1e-12):.2f}x"
+        )

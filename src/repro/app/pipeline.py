@@ -24,7 +24,13 @@ import numpy as np
 from repro.app import ops
 from repro.core import ParamSpace, StageSpec, TaskSpec, Workflow, dice
 from repro.core.params import ParamSet
-from repro.engine import ClusterSpec, MemoryBudget, execute_plan, plan_study
+from repro.engine import (
+    ClusterSpec,
+    MemoryBudget,
+    execute_plan,
+    execute_study,
+    plan_study,
+)
 
 __all__ = [
     "TABLE1_SPACE",
@@ -32,6 +38,7 @@ __all__ = [
     "build_segmentation_stage",
     "build_workflow",
     "run_study",
+    "run_dataset_study",
 ]
 
 # --------------------------------------------------------------------------
@@ -177,8 +184,41 @@ def build_workflow(h: int, w: int, costs: Optional[Dict[str, float]] = None) -> 
 
 
 # --------------------------------------------------------------------------
-# SA study driver: a thin caller of the StudyPlanner engine.
+# SA study drivers: thin callers of the StudyPlanner engine.
 # --------------------------------------------------------------------------
+
+
+def _plan_image_study(
+    h: int,
+    w: int,
+    param_sets: Sequence[ParamSet],
+    *,
+    strategy: str,
+    max_bucket_size: Optional[int],
+    active_paths: Optional[int],
+    costs: Optional[Dict[str, float]],
+    n_workers: int,
+    memory_budget_bytes: Optional[int],
+):
+    """Shared planning preamble of the single-tile and dataset drivers:
+    build the workflow for the tile shape and plan the study (with the
+    headline ``active_paths=4`` default when there is no budget to solve
+    against). Returns ``(workflow, plan, cluster)``."""
+    wf = build_workflow(h, w, costs)
+    memory = MemoryBudget(bytes=memory_budget_bytes)
+    cluster = ClusterSpec(n_workers=n_workers)
+    if active_paths is None and memory_budget_bytes is None:
+        active_paths = 4  # headline depth-first width when nothing to solve
+    plan = plan_study(
+        wf,
+        list(param_sets),
+        memory=memory,
+        cluster=cluster,
+        policy=strategy,
+        max_bucket_size=max_bucket_size,
+        active_paths=active_paths,
+    )
+    return wf, plan, cluster
 
 
 def run_study(
@@ -200,24 +240,21 @@ def run_study(
     merging (default rtma→8; rmsr merges maximally, the paper's headline
     configuration). ``n_workers`` dispatches buckets demand-driven through
     the Manager.
+
+    ``tasks_executed`` is the MEASURED count (cache hits subtracted) —
+    the same semantics as ``run_dataset_study`` — while
+    ``planned_tasks_executed`` / ``reuse_fraction`` report the plan's
+    merge-level accounting (the paper's analytic counts).
     """
     h, w = image.shape[:2]
-    wf = build_workflow(h, w, costs)
     ref_params = reference_params or TABLE1_SPACE.default()
-    memory = MemoryBudget(bytes=memory_budget_bytes)
-    cluster = ClusterSpec(n_workers=n_workers)
-    if active_paths is None and memory_budget_bytes is None:
-        active_paths = 4  # headline depth-first width when nothing to solve
 
     t0 = time.perf_counter()
-    plan = plan_study(
-        wf,
-        list(param_sets),
-        memory=memory,
-        cluster=cluster,
-        policy=strategy,
-        max_bucket_size=max_bucket_size,
-        active_paths=active_paths,
+    wf, plan, _cluster = _plan_image_study(
+        h, w, param_sets,
+        strategy=strategy, max_bucket_size=max_bucket_size,
+        active_paths=active_paths, costs=costs, n_workers=n_workers,
+        memory_budget_bytes=memory_budget_bytes,
     )
     raw = {"raw": jnp.asarray(image)}
     result = execute_plan(plan, raw)
@@ -233,11 +270,79 @@ def run_study(
     return {
         "dice": dices,
         "tasks_total": plan.tasks_total,
-        "tasks_executed": plan.tasks_executed,
+        "tasks_executed": result.tasks_executed,
+        "planned_tasks_executed": plan.tasks_executed,
         "reuse_fraction": plan.reuse_fraction,
         "peak_bytes": plan.peak_bytes,
         "wall_seconds": wall,
         "reference_mask": np.asarray(ref_mask),
         "cache_hits": result.cache_hits,
         "plan": plan,
+    }
+
+
+def run_dataset_study(
+    images: Sequence[np.ndarray],
+    param_sets: Sequence[ParamSet],
+    *,
+    strategy: str = "hybrid",
+    max_bucket_size: Optional[int] = None,
+    active_paths: Optional[int] = None,
+    reference_params: Optional[ParamSet] = None,
+    costs: Optional[Dict[str, float]] = None,
+    n_workers: int = 2,
+    memory_budget_bytes: Optional[int] = None,
+) -> Dict[str, Any]:
+    """Dataset-level SA study: many tiles streamed through ONE plan and one
+    persistent Manager session (DESIGN.md §10).
+
+    Plans once, then pipelines every tile concurrently through all stages —
+    tile A can be in segmentation while tile B normalizes. Returns per-tile
+    Dice lists plus the streaming throughput/parallel-efficiency metrics.
+    All tiles must share one shape (the plan's byte model is shape-exact).
+    """
+    images = list(images)
+    if not images:
+        raise ValueError("run_dataset_study needs at least one tile")
+    h, w = images[0].shape[:2]
+    if any(im.shape[:2] != (h, w) for im in images):
+        raise ValueError("all tiles must share one (h, w) shape")
+    ref_params = reference_params or TABLE1_SPACE.default()
+
+    t0 = time.perf_counter()
+    wf, plan, cluster = _plan_image_study(
+        h, w, param_sets,
+        strategy=strategy, max_bucket_size=max_bucket_size,
+        active_paths=active_paths, costs=costs, n_workers=n_workers,
+        memory_budget_bytes=memory_budget_bytes,
+    )
+    raws = [{"raw": jnp.asarray(im)} for im in images]
+    stream = execute_study(plan, raws, cluster=cluster)
+
+    ref_plan = plan_study(wf, [ref_params], policy="rmsr", active_paths=1)
+    ref_stream = execute_study(ref_plan, raws, cluster=cluster)
+    ref_masks = [ref_stream.outputs[i][0]["mask"] for i in range(len(images))]
+
+    dices = [
+        [
+            float(dice(stream.outputs[i][rid]["mask"], ref_masks[i]))
+            for rid in range(len(param_sets))
+        ]
+        for i in range(len(images))
+    ]
+    return {
+        "dice": dices,  # [tile][run]
+        "tasks_total": plan.tasks_total * len(images),
+        "tasks_executed": stream.tasks_executed,
+        "planned_tasks_executed": plan.tasks_executed * len(images),
+        "cache_hits": stream.cache_hits,
+        "throughput": stream.throughput,
+        "parallel_efficiency": stream.parallel_efficiency,
+        "manager_sessions": stream.manager_sessions,
+        "retries": stream.retries,
+        "backups_launched": stream.backups_launched,
+        "wall_seconds": time.perf_counter() - t0,
+        "reference_masks": [np.asarray(m) for m in ref_masks],
+        "plan": plan,
+        "stream": stream,
     }

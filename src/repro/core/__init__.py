@@ -37,4 +37,9 @@ from repro.core.sa import (  # noqa: F401
     saltelli_sample,
     vbd_indices,
 )
-from repro.core.metrics import dice, jaccard  # noqa: F401
+from repro.core.metrics import (  # noqa: F401
+    dice,
+    jaccard,
+    parallel_efficiency,
+    throughput,
+)

@@ -1,13 +1,34 @@
 """Output-difference metrics (paper §II-A): Dice and Jaccard coefficients
-between a run's segmentation mask and the default-parameter reference mask.
-Implemented as fused jnp reductions (one pass over the masks)."""
+between a run's segmentation mask and the default-parameter reference mask,
+implemented as fused jnp reductions (one pass over the masks) — plus the
+execution-side throughput/parallel-efficiency accounting the streaming
+dataset executor and the cluster simulator report (paper §IV-D)."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["dice", "jaccard"]
+__all__ = [
+    "dice",
+    "jaccard",
+    "throughput",
+    "parallel_efficiency",
+]
+
+
+def throughput(n_items: int, wall_seconds: float) -> float:
+    """Completed work items (tiles, batches) per second of wall-clock."""
+    return n_items / wall_seconds if wall_seconds > 0 else 0.0
+
+
+def parallel_efficiency(
+    busy_seconds: float, wall_seconds: float, n_workers: int
+) -> float:
+    """Useful-work fraction of the worker-seconds the run occupied — the
+    paper's busy/(makespan × workers) definition (≈0.92 at 256 nodes)."""
+    denom = wall_seconds * max(1, n_workers)
+    return busy_seconds / denom if denom > 0 else 0.0
 
 
 @jax.jit

@@ -132,7 +132,10 @@ def run_sa_serve(
             rid: float(res["accept_rate"]) for rid, res in result.outputs.items()
         },
         "tasks_total": plan.tasks_total,
-        "tasks_executed": plan.tasks_executed,
+        # measured count (cache hits subtracted) — same semantics as the
+        # pathology drivers; the plan's analytic count rides alongside
+        "tasks_executed": result.tasks_executed,
+        "planned_tasks_executed": plan.tasks_executed,
         "reuse_fraction": plan.reuse_fraction,
         "active_paths": plan.active_paths,
         "peak_bytes": plan.peak_bytes,

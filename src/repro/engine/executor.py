@@ -1,28 +1,30 @@
 """execute_plan — the dispatch half of the unified StudyPlanner engine.
 
-Stages run in order (a stage is a barrier); within a stage, every bucket is
-a :class:`~repro.runtime.manager.WorkItem` dispatched demand-driven through
-the Manager (heartbeats, retries, straggler backup tasks). Leaf outputs are
-routed by ``run_id`` into the next stage's instances, so dataflow crosses
+``execute_bucket`` replays one bucket's frozen schedule
+(:func:`~repro.core.rmsr.replay_schedule`) with the run-level cache plugged
+in; it is the unit of work both executors dispatch through the Manager.
+``execute_plan`` executes a plan on ONE input and is the K=1 special case
+of the streaming dataset executor (:mod:`repro.engine.streaming`): one
+persistent Manager session, leaf outputs routed by ``run_id`` into the next
+stage's buckets the moment the input's stage closes, so dataflow crosses
 stage boundaries without caller wiring.
 
-The run-level :class:`ResultCache` is keyed by ``(stage, upstream-group,
-trie-path)``: a retried or backup bucket replays its schedule but every
-already-computed merged prefix is a cache hit, and sibling buckets of the
-same group share prefixes the bucketing could not merge. Tasks are pure
-functions of ``(input, params)``, so cached reuse is bit-identical to
-recomputation.
+The run-level :class:`ResultCache` is keyed by ``(input, stage,
+upstream-group, trie-path)``: a retried or backup bucket replays its
+schedule but every already-computed merged prefix is a cache hit, and
+sibling buckets of the same group share prefixes the bucketing could not
+merge, while the input segment makes cross-input collisions structurally
+impossible. Tasks are pure functions of ``(input, params)``, so cached
+reuse is bit-identical to recomputation.
 """
 
 from __future__ import annotations
 
 import collections
 import threading
-import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 from repro.core.rmsr import replay_schedule
-from repro.runtime.manager import Manager, WorkItem
 from repro.engine.types import BucketPlan, ClusterSpec, StudyPlan, StudyResult
 
 __all__ = ["ResultCache", "execute_bucket", "execute_plan"]
@@ -74,19 +76,22 @@ def execute_bucket(
     bucket: BucketPlan,
     input_state: Any,
     cache: Optional[ResultCache] = None,
+    *,
+    scope: Optional[Tuple[Any, ...]] = None,
 ) -> Tuple[Dict[int, Any], int, int]:
     """Replay a bucket's frozen schedule (``rmsr.replay_schedule``) with the
-    run-level cache plugged in under the bucket's cache scope. Returns
+    run-level cache plugged in under ``scope`` (default: the bucket's own
+    cache scope; the streaming executor prefixes an input segment). Returns
     ``(run_id -> leaf output, tasks executed, cache hits)``."""
     lookup = store = None
     if cache is not None:
-        scope = bucket.cache_scope
+        key_scope = bucket.cache_scope if scope is None else scope
 
         def lookup(pk):
-            return cache.get(scope + (pk,))
+            return cache.get(key_scope + (pk,))
 
         def store(pk, out, task, params):
-            cache.put(scope + (pk,), out, task.bound_bytes(params))
+            cache.put(key_scope + (pk,), out, task.bound_bytes(params))
 
     return replay_schedule(
         bucket.tree, bucket.schedule.order, input_state, lookup=lookup, store=store
@@ -103,64 +108,19 @@ def execute_plan(
 
     Results are bit-identical across policies and worker counts: tasks are
     pure, every bucket replays a frozen schedule, and stage routing is keyed
-    by ``run_id`` alone.
+    by ``run_id`` alone. This is ``execute_study`` with a one-element
+    dataset — same session machinery, same cache keying, same accounting.
     """
-    cluster = cluster or plan.cluster or ClusterSpec()
-    cache = (
-        ResultCache(plan.memory.effective_cache_bytes) if plan.cache_enabled else None
-    )
-    t0 = time.perf_counter()
+    from repro.engine.streaming import execute_study  # circular at import time
 
-    current: Dict[int, Any] = {rid: input_state for rid in range(plan.n_runs)}
-    total_executed = 0
-    total_hits = 0
-    total_retries = 0
-    total_backups = 0
-    per_stage_executed: List[int] = []
-    for stage_plan in plan.stages:
-        mgr = Manager(
-            max_attempts=cluster.max_attempts,
-            heartbeat_timeout=cluster.heartbeat_timeout,
-            straggler_factor=cluster.straggler_factor,
-            enable_backup_tasks=cluster.enable_backup_tasks,
-        )
-        for bi, bucket in enumerate(stage_plan.buckets):
-            inp = current[bucket.run_ids[0]]
-            mgr.submit(
-                WorkItem(
-                    key=f"{stage_plan.index}:{stage_plan.stage.name}:{bi}",
-                    fn=lambda b=bucket, s=inp: execute_bucket(b, s, cache),
-                )
-            )
-        per_bucket = mgr.run(cluster.n_workers, expected=len(stage_plan.buckets))
-        total_retries += mgr.retries
-        total_backups += mgr.backups_launched
-
-        stage_executed = 0
-        routed: Dict[int, Any] = {}
-        for value in per_bucket.values():
-            if isinstance(value, Exception):
-                raise value
-            bucket_results, executed, hits = value
-            stage_executed += executed
-            total_hits += hits
-            routed.update(bucket_results)
-        missing = set(range(plan.n_runs)) - set(routed)
-        if missing:
-            raise RuntimeError(
-                f"stage {stage_plan.stage.name!r} produced no output for "
-                f"{len(missing)} runs (first: {sorted(missing)[:5]})"
-            )
-        per_stage_executed.append(stage_executed)
-        total_executed += stage_executed
-        current = routed  # run_id-routed dataflow into the next stage
-
+    stream = execute_study(plan, [input_state], cluster=cluster)
+    only = stream.per_input[0]
     return StudyResult(
-        outputs=current,
-        tasks_executed=total_executed,
-        cache_hits=total_hits,
-        retries=total_retries,
-        backups_launched=total_backups,
-        wall_seconds=time.perf_counter() - t0,
-        per_stage_executed=per_stage_executed,
+        outputs=only.outputs,
+        tasks_executed=only.tasks_executed,
+        cache_hits=only.cache_hits,
+        retries=stream.retries,
+        backups_launched=stream.backups_launched,
+        wall_seconds=stream.wall_seconds,
+        per_stage_executed=only.per_stage_executed,
     )

@@ -1,0 +1,183 @@
+"""execute_study — the dataset-level streaming executor (DESIGN.md §10).
+
+The paper's headline numbers come from SA over *datasets*: hundreds of
+whole-slide tiles flowing through the Manager-Worker runtime at >92%
+parallel efficiency. A :class:`~repro.engine.types.StudyPlan` is
+input-independent ("plan once, execute on every tile"), so the dataset
+dimension is pure execution: ``execute_study(plan, inputs)`` drives many
+inputs through one plan concurrently inside a **single persistent Manager
+session** spanning every input and stage.
+
+The global per-stage barrier of the one-input executor becomes a
+**per-input dependency edge**: stage *s+1* buckets of input *i* are
+submitted the moment the last stage-*s* bucket of input *i* completes (a
+Manager completion callback), so tile A can be in segmentation while tile B
+is still normalizing and Workers never idle at a stage boundary waiting for
+an unrelated tile. Parameter-free stages still collapse to one shared
+execution *per input* (that is a plan property), and the run-level
+:class:`~repro.engine.executor.ResultCache` is keyed with an input-scoped
+segment so cross-input collisions are structurally impossible — tasks are
+pure functions of ``(input, params)`` and the input differs.
+
+``execute_plan`` is the K=1 special case and delegates here, which is what
+makes the differential guarantee cheap to state: ``execute_study`` over K
+inputs is bit-identical to K sequential ``execute_plan`` calls under every
+policy and worker count, while starting one Manager session instead of K.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, List, Optional, Sequence
+
+from repro.engine.executor import ResultCache, execute_bucket
+from repro.engine.types import (
+    ClusterSpec,
+    StudyPlan,
+    StudyResult,
+    StudyStreamResult,
+)
+from repro.runtime.manager import Manager, WorkItem
+
+__all__ = ["execute_study"]
+
+
+class _InputState:
+    """Mutable per-input progress record; guarded by the study lock."""
+
+    __slots__ = (
+        "current", "routed", "remaining", "executed", "hits",
+        "t_submit", "t_done",
+    )
+
+    def __init__(self, plan: StudyPlan, input_state: Any):
+        self.current = {rid: input_state for rid in range(plan.n_runs)}
+        self.routed: dict = {}
+        self.remaining = [len(sp.buckets) for sp in plan.stages]
+        self.executed = [0] * len(plan.stages)
+        self.hits = [0] * len(plan.stages)
+        self.t_submit = 0.0
+        self.t_done = 0.0
+
+
+def execute_study(
+    plan: StudyPlan,
+    inputs: Sequence[Any],
+    *,
+    cluster: Optional[ClusterSpec] = None,
+) -> StudyStreamResult:
+    """Execute a :class:`StudyPlan` on every input in ``inputs``, pipelined
+    through one persistent Manager session.
+
+    Outputs are bit-identical to sequential per-input execution: buckets
+    replay frozen schedules of pure tasks, routing is keyed by ``run_id``
+    alone, and the result cache carries an input-scoped key segment. The
+    first permanently-failed bucket (Manager retries exhausted) aborts the
+    study after the session drains, re-raising the original exception.
+    """
+    cluster = cluster or plan.cluster or ClusterSpec()
+    inputs = list(inputs)
+    cache = (
+        ResultCache(plan.memory.effective_cache_bytes) if plan.cache_enabled else None
+    )
+    mgr = Manager(
+        max_attempts=cluster.max_attempts,
+        heartbeat_timeout=cluster.heartbeat_timeout,
+        straggler_factor=cluster.straggler_factor,
+        enable_backup_tasks=cluster.enable_backup_tasks,
+    )
+    states = [_InputState(plan, inp) for inp in inputs]
+    errors: List[BaseException] = []
+    lock = threading.Lock()
+    n_stages = len(plan.stages)
+
+    def submit_stage(i: int, si: int) -> None:
+        stage_plan = plan.stages[si]
+        st = states[i]
+        for bi, bucket in enumerate(stage_plan.buckets):
+            src = st.current[bucket.run_ids[0]]
+            mgr.submit(
+                WorkItem(
+                    key=f"in{i}:{stage_plan.index}:{stage_plan.stage.name}:{bi}",
+                    fn=lambda b=bucket, s=src, i=i: execute_bucket(
+                        b, s, cache, scope=("input", i) + b.cache_scope
+                    ),
+                    callback=lambda _key, value, i=i, si=si: on_bucket(i, si, value),
+                )
+            )
+
+    def on_bucket(i: int, si: int, value: Any) -> None:
+        """Per-item completion callback (Worker thread, outside Manager
+        lock): fold the bucket into input i's stage accumulator; when the
+        stage closes, route outputs and submit the next stage — the
+        per-input dependency edge."""
+        st = states[i]
+        advance = False
+        with lock:
+            st.remaining[si] -= 1
+            if isinstance(value, Exception):
+                errors.append(value)
+                return
+            bucket_results, executed, hits = value
+            st.executed[si] += executed
+            st.hits[si] += hits
+            st.routed.update(bucket_results)
+            if st.remaining[si] == 0:
+                missing = set(range(plan.n_runs)) - set(st.routed)
+                if missing:
+                    errors.append(
+                        RuntimeError(
+                            f"input {i}: stage {plan.stages[si].stage.name!r} "
+                            f"produced no output for {len(missing)} runs "
+                            f"(first: {sorted(missing)[:5]})"
+                        )
+                    )
+                    return
+                st.current = st.routed  # run_id-routed dataflow, next stage
+                st.routed = {}
+                if si + 1 < n_stages:
+                    advance = True
+                else:
+                    st.t_done = time.perf_counter()
+        if advance:
+            submit_stage(i, si + 1)
+
+    t0 = time.perf_counter()
+    mgr.start(cluster.n_workers)
+    try:
+        for i in range(len(inputs)):
+            states[i].t_submit = time.perf_counter()
+            submit_stage(i, 0)
+        mgr.drain()
+    finally:
+        mgr.close()
+    if errors:
+        raise errors[0]
+    wall = time.perf_counter() - t0
+
+    per_input = [
+        StudyResult(
+            outputs=st.current,
+            tasks_executed=sum(st.executed),
+            cache_hits=sum(st.hits),
+            retries=0,  # session-wide: see StudyStreamResult.retries
+            backups_launched=0,
+            wall_seconds=st.t_done - st.t_submit,
+            per_stage_executed=list(st.executed),
+        )
+        for st in states
+    ]
+    return StudyStreamResult(
+        outputs={i: r.outputs for i, r in enumerate(per_input)},
+        per_input=per_input,
+        n_inputs=len(inputs),
+        n_workers=cluster.n_workers,
+        tasks_executed=sum(r.tasks_executed for r in per_input),
+        cache_hits=sum(r.cache_hits for r in per_input),
+        retries=mgr.retries,
+        backups_launched=mgr.backups_launched,
+        wall_seconds=wall,
+        busy_seconds=mgr.busy_seconds,
+        manager_sessions=1,
+    )

@@ -25,6 +25,7 @@ __all__ = [
     "StagePlan",
     "StudyPlan",
     "StudyResult",
+    "StudyStreamResult",
 ]
 
 POLICIES = ("none", "stage", "rtma", "rmsr", "hybrid")
@@ -196,3 +197,47 @@ class StudyResult:
     backups_launched: int
     wall_seconds: float
     per_stage_executed: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class StudyStreamResult:
+    """Outputs of ``execute_study``: one study-wide streaming execution of a
+    plan over many inputs through a single persistent Manager session
+    (DESIGN.md §10).
+
+    ``outputs[i][run_id]`` is the final-stage state of run ``run_id`` on
+    input ``i`` — bit-identical to ``execute_plan(plan, inputs[i])``.
+    ``per_input`` carries the per-input accounting (task counts, cache hits,
+    per-stage executed, submit→complete latency); ``retries`` /
+    ``backups_launched`` are session-wide because the persistent Manager
+    spans all inputs. ``busy_seconds`` sums the winning attempts' wall-times,
+    so ``parallel_efficiency`` matches the paper's busy/(makespan×workers)
+    definition.
+    """
+
+    outputs: Dict[int, Dict[int, Any]]
+    per_input: List[StudyResult]
+    n_inputs: int
+    n_workers: int
+    tasks_executed: int
+    cache_hits: int
+    retries: int
+    backups_launched: int
+    wall_seconds: float
+    busy_seconds: float
+    manager_sessions: int = 1
+
+    @property
+    def throughput(self) -> float:
+        """Completed inputs per second of study wall-clock."""
+        from repro.core.metrics import throughput
+
+        return throughput(self.n_inputs, self.wall_seconds)
+
+    @property
+    def parallel_efficiency(self) -> float:
+        from repro.core.metrics import parallel_efficiency
+
+        return parallel_efficiency(
+            self.busy_seconds, self.wall_seconds, self.n_workers
+        )

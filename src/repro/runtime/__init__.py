@@ -3,5 +3,10 @@ storage, fault tolerance (heartbeats/retry/backup tasks), elastic scaling,
 and the paper-scale cluster simulator."""
 
 from repro.runtime.manager import Manager, WorkItem, run_study_distributed  # noqa: F401
-from repro.runtime.simulator import ClusterSim, simulate_cluster  # noqa: F401
+from repro.runtime.simulator import (  # noqa: F401
+    ClusterSim,
+    StreamSim,
+    simulate_cluster,
+    simulate_stream,
+)
 from repro.runtime.storage import HierarchicalStore  # noqa: F401

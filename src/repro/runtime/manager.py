@@ -5,13 +5,26 @@ with the fault-tolerance features a 1000-node deployment needs:
   load balancing, same as the paper's 92%-efficiency runs);
 * heartbeats + retry — a bucket whose Worker misses its heartbeat deadline
   is re-enqueued (at-least-once; results are idempotent because tasks are
-  pure functions of (input, params));
+  pure functions of (input, params)); the deadline adapts to observed
+  bucket times so a long-running bucket (e.g. a first-time jit compile) is
+  not mistaken for a dead Worker;
 * straggler mitigation — when the queue is empty and a bucket has been
   running longer than ``straggler_factor`` × the median bucket time, a
   backup copy is launched on an idle Worker; first completion wins (the
   classic demand-driven tail-cloning trick);
 * elastic scaling — Workers can join/leave between buckets; the Manager
   only tracks outstanding leases.
+
+Sessions are **long-lived** (DESIGN.md §10): ``start`` spawns the Worker
+pool once, ``submit`` is legal while Workers are running (including from a
+completion callback on a Worker thread), ``drain`` blocks until every
+submitted item has a result, and ``close`` retires the pool. The one-shot
+``run`` wrapper keeps the original batch semantics on top of the same
+machinery. Per-item completion callbacks fire exactly once per key — on the
+*first* completion, under the same lock that records the result — so a
+raced straggler backup can never double-report; the callback body itself
+runs outside the lock so it may re-enter ``submit`` (how the streaming
+executor chains per-input stage edges).
 
 Workers here are threads driving real JAX execution (the container is one
 node); across real nodes the same Manager logic fronts an RPC boundary —
@@ -21,13 +34,17 @@ models at 256 nodes.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-import queue
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
 __all__ = ["WorkItem", "Manager", "run_study_distributed"]
+
+# How long an idle Worker sleeps between wake-up checks; bounds the latency
+# of straggler/heartbeat detection while the queue is empty.
+_IDLE_TICK = 0.02
 
 
 @dataclasses.dataclass
@@ -37,9 +54,18 @@ class WorkItem:
     attempts: int = 0
     started_at: Optional[float] = None
     worker: Optional[int] = None
+    # Called exactly once, as fn's first completion (or permanent failure,
+    # with the Exception as the value) is recorded. Runs on the completing
+    # Worker's thread, outside the Manager lock.
+    callback: Optional[Callable[[str, Any], None]] = None
 
 
 class Manager:
+    # Total Worker-pool sessions ever started in this process; the
+    # differential suite uses deltas of this to prove execute_study spins up
+    # ONE session per study instead of one per stage×input.
+    sessions_started = 0
+
     def __init__(
         self,
         *,
@@ -48,49 +74,159 @@ class Manager:
         straggler_factor: float = 3.0,
         enable_backup_tasks: bool = True,
     ):
-        self._queue: "queue.Queue[WorkItem]" = queue.Queue()
+        self._queue: "collections.deque[WorkItem]" = collections.deque()
         self._results: Dict[str, Any] = {}
         self._running: Dict[str, WorkItem] = {}
         self._attempt_seq: Dict[str, int] = {}  # highest attempt # issued per key
-        self._durations: List[float] = []
+        self._callbacks: Dict[str, Callable[[str, Any], None]] = {}
+        self._pending: set = set()  # keys submitted, no result yet
+        # Recent-window of winning-attempt durations for the straggler /
+        # heartbeat heuristics: bounded so a session spanning thousands of
+        # inputs never grows the median computation, with the sorted median
+        # cached between appends (idle workers poll it every tick).
+        self._durations: "collections.deque[float]" = collections.deque(maxlen=512)
+        self._median_cache: Optional[float] = None
+        self._busy_total = 0.0  # lifetime sum (the efficiency numerator)
         self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._threads: List[threading.Thread] = []
+        self._closed = False
         self.max_attempts = max_attempts
         self.heartbeat_timeout = heartbeat_timeout
         self.straggler_factor = straggler_factor
         self.enable_backup_tasks = enable_backup_tasks
         self.retries = 0
         self.backups_launched = 0
+        self.heartbeat_expiries = 0
 
-    def submit(self, item: WorkItem) -> None:
-        self._queue.put(item)
+    @property
+    def busy_seconds(self) -> float:
+        """Sum of winning-attempt wall-times — the useful-work numerator of
+        the parallel-efficiency accounting."""
+        with self._lock:
+            return self._busy_total
+
+    def _record_duration_locked(self, dur: float) -> None:
+        self._durations.append(dur)
+        self._busy_total += dur
+        self._median_cache = None
+
+    def _median_locked(self) -> Optional[float]:
+        if not self._durations:
+            return None
+        if self._median_cache is None:
+            ordered = sorted(self._durations)
+            self._median_cache = ordered[len(ordered) // 2]
+        return self._median_cache
 
     # ------------------------------------------------------------------
-    def _next(self, worker_id: int) -> Optional[WorkItem]:
+    # Session lifecycle
+    # ------------------------------------------------------------------
+    def start(self, n_workers: int) -> None:
+        """Spawn the Worker pool. One session may span many stages and many
+        inputs; submitting while Workers run is the intended usage."""
+        if self._threads:
+            raise RuntimeError("Manager session already started")
+        self._closed = False
+        Manager.sessions_started += 1
+        self._threads = [
+            threading.Thread(target=self._worker, args=(i,), daemon=True)
+            for i in range(max(1, n_workers))
+        ]
+        for t in self._threads:
+            t.start()
+
+    def submit(self, item: WorkItem) -> None:
+        """Enqueue work; legal before ``start`` and while Workers run.
+        Re-submitting a key that already has a result is a no-op."""
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("Manager session is closed")
+            if item.key in self._results:
+                return
+            if item.callback is not None:
+                self._callbacks[item.key] = item.callback
+            self._pending.add(item.key)
+            self._queue.append(item)
+            self._cond.notify()
+
+    def drain(self) -> None:
+        """Block until every submitted key has a result (success or
+        permanent failure). Workers stay alive — more work may follow."""
+        with self._cond:
+            while self._pending:
+                self._cond.wait(_IDLE_TICK)
+
+    def close(self) -> None:
+        """Retire the Worker pool (waits for in-flight attempts to return)."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        for t in self._threads:
+            t.join()
+        self._threads = []
+
+    def results(self) -> Dict[str, Any]:
+        with self._lock:
+            return dict(self._results)
+
+    # ------------------------------------------------------------------
+    # Worker protocol
+    # ------------------------------------------------------------------
+    def _next_locked(self, worker_id: int) -> Optional[WorkItem]:
         # Dequeue and lease registration are atomic under one lock: a peer
         # observing (queue empty, no leases) under that lock can therefore
         # conclude the system is idle — there is no window where an item has
         # left the queue but is not yet visible in ``_running``. Items whose
         # key already has a result (a raced retry/backup) are dropped here,
         # before any lease exists, so they can never leak one.
-        with self._lock:
-            while True:
-                try:
-                    item = self._queue.get_nowait()
-                except queue.Empty:
-                    item = self._maybe_backup_locked()
-                    if item is None:
-                        return None
-                    break
-                if item.key not in self._results:
-                    break
-            item.started_at = time.monotonic()
-            item.worker = worker_id
-            # attempt numbers are issued centrally so concurrent attempts of
-            # one key (original + backup) always hold distinct leases
-            item.attempts = self._attempt_seq.get(item.key, 0) + 1
-            self._attempt_seq[item.key] = item.attempts
-            self._running[f"{item.key}#{item.attempts}"] = item
+        while True:
+            if not self._queue:
+                item = self._maybe_backup_locked()
+                if item is None:
+                    return None
+                break
+            item = self._queue.popleft()
+            if item.key not in self._results:
+                break
+        item.started_at = time.monotonic()
+        item.worker = worker_id
+        # attempt numbers are issued centrally so concurrent attempts of
+        # one key (original + backup) always hold distinct leases
+        item.attempts = self._attempt_seq.get(item.key, 0) + 1
+        self._attempt_seq[item.key] = item.attempts
+        self._running[f"{item.key}#{item.attempts}"] = item
         return item
+
+    def _expire_heartbeats_locked(self) -> None:
+        """Re-enqueue leases whose Worker missed the heartbeat deadline
+        (a Worker death mid-lease). The lease is released; if the presumed-
+        dead attempt does return later, first-completion-wins dedups it.
+
+        In-process Workers cannot heartbeat while inside a task fn, so a
+        long bucket is indistinguishable from a dead Worker by age alone.
+        The deadline therefore adapts to observed bucket times — ``max(
+        heartbeat_timeout, straggler_factor × median)`` — and with no
+        completed-bucket history yet (e.g. the first bucket is a multi-
+        minute jit compile) nothing is ever expired."""
+        median = self._median_locked()
+        if median is None:
+            return
+        deadline = max(self.heartbeat_timeout, self.straggler_factor * median)
+        now = time.monotonic()
+        for lease, it in list(self._running.items()):
+            if it.key in self._results:
+                continue
+            started = it.started_at or now
+            if now - started <= deadline:
+                continue
+            if self._attempt_seq.get(it.key, 0) >= self.max_attempts:
+                continue
+            del self._running[lease]
+            self.heartbeat_expiries += 1
+            self.retries += 1
+            self._queue.append(WorkItem(key=it.key, fn=it.fn))
+            self._cond.notify()
 
     def _maybe_backup_locked(self) -> Optional[WorkItem]:
         """Clone the longest-running bucket if it looks like a straggler.
@@ -101,7 +237,7 @@ class Manager:
             return None
         if not self._running or len(self._durations) < 2:
             return None
-        median = sorted(self._durations)[len(self._durations) // 2]
+        median = self._median_locked()
         now = time.monotonic()
         candidates = [
             it
@@ -119,65 +255,81 @@ class Manager:
             return WorkItem(key=worst.key, fn=worst.fn)
         return None
 
-    def _complete(self, item: WorkItem, result: Any) -> None:
-        with self._lock:
+    def _settle(self, item: WorkItem, value: Any) -> None:
+        """Record a final value (result or permanent failure) for a key and
+        fire its callback exactly once. The key stays in ``_pending`` until
+        the callback returns, so ``drain`` cannot observe a momentarily-empty
+        pending set while a callback is still about to submit downstream
+        work (the per-input stage edge of the streaming executor)."""
+        cb = None
+        won = False
+        with self._cond:
             self._running.pop(f"{item.key}#{item.attempts}", None)
             if item.key not in self._results:  # first completion wins
-                self._results[item.key] = result
-                if item.started_at is not None:
-                    self._durations.append(time.monotonic() - item.started_at)
+                won = True
+                self._results[item.key] = value
+                if item.started_at is not None and not isinstance(value, Exception):
+                    self._record_duration_locked(time.monotonic() - item.started_at)
+                cb = self._callbacks.pop(item.key, None)
+            self._cond.notify_all()
+        if not won:  # raced duplicate: the winner owns callback + pending
+            return
+        try:
+            if cb is not None:
+                cb(item.key, value)
+        finally:
+            with self._cond:
+                self._pending.discard(item.key)
+                self._cond.notify_all()
 
     def _fail(self, item: WorkItem, err: Exception) -> None:
         # Lease release and re-enqueue happen under one lock so peers never
         # observe (queue empty, no leases) while a retry is still in flight.
-        with self._lock:
-            self._running.pop(f"{item.key}#{item.attempts}", None)
-            if item.attempts < self.max_attempts:
+        with self._cond:
+            if item.attempts < self.max_attempts and item.key not in self._results:
+                self._running.pop(f"{item.key}#{item.attempts}", None)
                 self.retries += 1
-                # attempt numbers are issued by _next at lease time
-                self._queue.put(WorkItem(key=item.key, fn=item.fn))
-            else:
-                self._results[item.key] = err
+                # attempt numbers are issued by _next_locked at lease time
+                self._queue.append(WorkItem(key=item.key, fn=item.fn))
+                self._cond.notify()
+                return
+        self._settle(item, err)
 
+    def _worker(self, worker_id: int) -> None:
+        while True:
+            with self._cond:
+                item = self._next_locked(worker_id)
+                if item is None:
+                    self._expire_heartbeats_locked()
+                    item = self._next_locked(worker_id)
+                if item is None:
+                    if self._closed and not self._pending:
+                        return
+                    self._cond.wait(_IDLE_TICK)
+                    continue
+            if item.key in self._results:
+                with self._lock:  # bucket completed after we leased: release
+                    self._running.pop(f"{item.key}#{item.attempts}", None)
+                continue
+            try:
+                value = item.fn()
+            except Exception as e:  # noqa: BLE001 — retry path
+                self._fail(item, e)
+            else:
+                self._settle(item, value)
+
+    # ------------------------------------------------------------------
+    # One-shot batch mode (the pre-streaming API, kept verbatim)
     # ------------------------------------------------------------------
     def run(self, n_workers: int, *, expected: int) -> Dict[str, Any]:
         """Run until ``expected`` distinct results exist."""
-
-        def worker(worker_id: int) -> None:
-            while True:
-                with self._lock:
-                    if len(self._results) >= expected:
-                        return
-                item = self._next(worker_id)
-                if item is None:
-                    # Re-check emptiness and leases under ONE lock
-                    # acquisition: because _next/_fail keep dequeue and
-                    # lease state atomic, (empty queue, no leases) here
-                    # proves no work exists or can reappear.
-                    with self._lock:
-                        done = len(self._results) >= expected
-                        idle = self._queue.empty() and not self._running
-                    if done or idle:
-                        return
-                    time.sleep(0.005)
-                    continue
-                if item.key in self._results:
-                    with self._lock:  # bucket completed after we leased: release
-                        self._running.pop(f"{item.key}#{item.attempts}", None)
-                    continue
-                try:
-                    self._complete(item, item.fn())
-                except Exception as e:  # noqa: BLE001 — retry path
-                    self._fail(item, e)
-
-        threads = [
-            threading.Thread(target=worker, args=(i,), daemon=True)
-            for i in range(n_workers)
-        ]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
+        self.start(n_workers)
+        try:
+            with self._cond:
+                while len(self._results) < expected and self._pending:
+                    self._cond.wait(_IDLE_TICK)
+        finally:
+            self.close()
         return dict(self._results)
 
 

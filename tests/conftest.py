@@ -1,0 +1,24 @@
+"""Shared test configuration.
+
+Registers a deterministic hypothesis profile ("ci": derandomized, no
+deadline) and loads it when running under CI, so the property suites are
+reproducible run-to-run and tier-1 stays deterministic. Local runs keep
+hypothesis' default randomized exploration (profile "dev").
+"""
+
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:  # hypothesis is optional; property tests importorskip it
+    pass
+else:
+    settings.register_profile(
+        "ci",
+        deadline=None,
+        max_examples=25,
+        derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.register_profile("dev", deadline=None)
+    settings.load_profile("ci" if os.environ.get("CI") else "dev")

@@ -1,0 +1,89 @@
+"""Seeded random study generator shared by the differential / property /
+conformance suites (no jax, no hypothesis — plain ``random.Random``).
+
+Workflows are multi-stage pipelines of integer-mixing tasks: each task's
+output is ``(x * M + crc32(stage, task, sorted(params))) mod P`` — a
+collision-sensitive pure function of ``(input, params)``, so any routing,
+merging, caching or scoping bug in the engine shows up as a wrong integer,
+not a tolerance miss. Bit-identical here means ``==`` on exact ints.
+"""
+
+from __future__ import annotations
+
+import random
+import zlib
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core import StageSpec, TaskSpec, Workflow
+
+PRIME = (1 << 61) - 1
+_MULT = 1048573
+
+
+def _mix_fn(stage_idx: int, task_idx: int):
+    def fn(x: int, **kw) -> int:
+        tag = repr((stage_idx, task_idx, tuple(sorted(kw.items())))).encode()
+        return (x * _MULT + zlib.crc32(tag)) % PRIME
+
+    return fn
+
+
+def random_workflow(
+    rng: random.Random,
+    *,
+    max_stages: int = 3,
+    max_tasks: int = 3,
+    max_card: int = 3,
+    max_bytes: int = 256,
+) -> Tuple[Workflow, List[str], Dict[str, int]]:
+    """Random multi-stage workflow. Returns (workflow, param names in order,
+    name -> cardinality). Some tasks are parameter-free (the collapsing
+    normalization case); byte sizes and costs vary per task."""
+    names: List[str] = []
+    cards: Dict[str, int] = {}
+    stages: List[StageSpec] = []
+    for si in range(rng.randint(1, max_stages)):
+        tasks = []
+        for ti in range(rng.randint(1, max_tasks)):
+            n_params = rng.choice([0, 1, 1, 2])
+            task_names = []
+            for _ in range(n_params):
+                nm = f"p{len(names)}"
+                names.append(nm)
+                cards[nm] = rng.randint(1, max_card)
+                task_names.append(nm)
+            tasks.append(
+                TaskSpec(
+                    name=f"s{si}t{ti}",
+                    param_names=tuple(task_names),
+                    fn=_mix_fn(si, ti),
+                    cost=rng.choice([0.5, 1.0, 2.0]),
+                    output_bytes=rng.choice([0, max_bytes // 4, max_bytes]),
+                )
+            )
+        stages.append(StageSpec(name=f"stage{si}", tasks=tuple(tasks)))
+    return Workflow(stages=tuple(stages)), names, cards
+
+
+def random_param_sets(
+    rng: random.Random, names: Sequence[str], cards: Dict[str, int], n_runs: int
+) -> List[Tuple[Tuple[str, int], ...]]:
+    """n_runs random ParamSets (duplicates likely at small cardinality —
+    exactly what exercises dedup/merging)."""
+    return [
+        tuple((nm, rng.randrange(cards[nm])) for nm in names) for _ in range(n_runs)
+    ]
+
+
+def naive_outputs(workflow: Workflow, param_sets, input_state):
+    """The trusted oracle: every run independently, straight-line, no reuse,
+    no dispatch. Anything any executor returns must equal this exactly."""
+    out = {}
+    for rid, ps in enumerate(param_sets):
+        d = dict(ps)
+        x = input_state
+        for stage in workflow.stages:
+            for task in stage.tasks:
+                x = task.fn(x, **{k: d[k] for k in task.param_names})
+        out[rid] = x
+    return out
