@@ -1,0 +1,122 @@
+"""Adaptive multi-round study vs one-shot rounds (DESIGN.md §11) —
+``BENCH_adaptive.json``.
+
+The scenario the paper's reuse machinery exists for: an iterative SA
+campaign (MOAT screening → prune → VBD on the survivors → refinement)
+where each round's run-list overlaps the history. Two executions of the
+*identical* round sequence over ``TABLE1_SPACE`` on a real tile:
+
+* **adaptive** — ``repro.study.StudyDriver``: one persistent Manager
+  session, a round-shared result cache backed by the hierarchical store,
+  delta-only planning against the cached trie;
+* **one-shot** — every round replayed as an independent study (fresh plan,
+  fresh cache, fresh session), the pre-``repro.study`` workflow.
+
+Reported: total tasks executed (must be strictly fewer adaptively; the
+outputs are bit-identical by purity), wall clock, and the study-wide reuse
+factor.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.app import TABLE1_SPACE, synthetic_tile
+from repro.app.pipeline import build_workflow
+from repro.core import dice
+from repro.core.metrics import reuse_factor
+from repro.engine import ClusterSpec, execute_study, plan_study
+from repro.study import (
+    MoatSampler,
+    RefinementSampler,
+    SaltelliSampler,
+    StudyDriver,
+)
+
+from benchmarks.common import SMOKE
+
+
+def run(csv: List[str]) -> None:
+    size = 32 if SMOKE else 64
+    n_traj = 1 if SMOKE else 2
+    n_base = 2 if SMOKE else 4
+    max_rounds = 3 if SMOKE else 4
+    wf = build_workflow(size, size)
+    cluster = ClusterSpec(n_workers=2)
+    tile = {"raw": jnp.asarray(synthetic_tile(size, size, seed=0))}
+
+    ref_plan = plan_study(wf, [TABLE1_SPACE.default()], policy="rmsr", active_paths=1)
+    ref_mask = execute_study(ref_plan, [tile]).outputs[0][0]["mask"]
+
+    # warm every jit variant (conn-style params are static args, so both
+    # grid values trigger a compile) — whichever side runs first must not
+    # be charged for XLA compilation
+    defaults = dict(TABLE1_SPACE.default())
+    warm_sets = []
+    for conn in (4, 8):
+        d = dict(defaults)
+        d.update(FH=conn, RC=conn, WConn=conn)
+        warm_sets.append(tuple(sorted(d.items())))
+    execute_study(plan_study(wf, warm_sets, policy="rmsr", active_paths=1), [tile])
+
+    def objective(leaf_state, _i):
+        return 1.0 - float(dice(leaf_state["mask"], ref_mask))
+
+    def make_driver():
+        return StudyDriver(
+            wf, TABLE1_SPACE, [tile],
+            objective=objective, seed=11, cluster=cluster,
+            samplers={
+                "moat": MoatSampler(n_traj),
+                "vbd": SaltelliSampler(n_base),
+                "refine": RefinementSampler(),
+            },
+            n_boot=16, input_keys=["tile0"],
+        )
+
+    # ---------------- adaptive: the repro.study driver -------------------
+    t0 = time.perf_counter()
+    driver = make_driver()
+    try:
+        state = driver.run(max_rounds=max_rounds)
+    finally:
+        driver.close()
+    t_adaptive = time.perf_counter() - t0
+    adaptive_tasks = state.tasks_executed
+
+    # ---------------- one-shot oracle: same rounds, no cross-round state --
+    t0 = time.perf_counter()
+    oneshot_tasks = 0
+    for r in state.rounds:
+        plan = plan_study(
+            wf, list(dict.fromkeys(r.param_sets)),
+            policy="hybrid", active_paths=4, cluster=cluster,
+        )
+        stream = execute_study(plan, [tile], cluster=cluster)
+        oneshot_tasks += stream.tasks_executed
+        for rid, ps in enumerate(dict.fromkeys(r.param_sets)):
+            assert np.isclose(
+                1.0 - float(dice(stream.outputs[0][rid]["mask"], ref_mask)),
+                state.evaluated[ps],
+            ), "adaptive reuse changed a result"
+    t_oneshot = time.perf_counter() - t0
+
+    assert adaptive_tasks < oneshot_tasks, (
+        f"adaptive ({adaptive_tasks}) must beat one-shot ({oneshot_tasks})"
+    )
+    rf = reuse_factor(adaptive_tasks, state.tasks_requested)
+    csv.append(
+        f"adaptive_study,{t_adaptive*1e6:.0f},"
+        f"rounds={len(state.rounds)}_tasks={adaptive_tasks}"
+        f"_reuse_factor={rf:.2f}x_active={len(state.active)}"
+    )
+    csv.append(
+        f"adaptive_oneshot_oracle,{t_oneshot*1e6:.0f},"
+        f"tasks={oneshot_tasks}"
+        f"_adaptive_saves={oneshot_tasks - adaptive_tasks}tasks"
+        f"_speedup={t_oneshot/max(t_adaptive,1e-9):.2f}x"
+    )

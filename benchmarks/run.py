@@ -7,14 +7,17 @@ run. A failed module still produces its artifact (``"ok": false`` + the
 traceback) and makes the harness exit non-zero after the remaining modules
 finish.
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,table2,fig8,streaming]
-     [--out-dir DIR]   (REPRO_BENCH_SMOKE=1 shrinks sizes for CI smoke runs)
+Run: PYTHONPATH=src python -m benchmarks.run
+     [--only fig6,fig7,table2,fig8,streaming,adaptive] [--out-dir DIR]
+     [--quick]   (the CI smoke profile: shrinks sizes, same pipeline;
+                  equivalent to REPRO_BENCH_SMOKE=1)
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 import time
@@ -37,17 +40,27 @@ def _rows_to_json(rows: List[str]) -> List[dict]:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
-        "--only", default=None, help="comma list: fig6,fig7,table2,fig8,streaming"
+        "--only",
+        default=None,
+        help="comma list: fig6,fig7,table2,fig8,streaming,adaptive",
     )
     ap.add_argument(
         "--out-dir", default=".", help="where BENCH_<module>.json artifacts land"
     )
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="smoke profile (reduced sizes; numbers not comparable to full runs)",
+    )
     args = ap.parse_args()
+    if args.quick:
+        # must precede the benchmarks.* imports: common.SMOKE reads it once
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
     wanted = set(args.only.split(",")) if args.only else None
     out_dir = pathlib.Path(args.out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
 
-    from benchmarks import fig6, fig7, fig8, streaming, table2
+    from benchmarks import adaptive, fig6, fig7, fig8, streaming, table2
 
     modules = {
         "fig6": fig6,
@@ -55,6 +68,7 @@ def main() -> None:
         "table2": table2,
         "fig8": fig8,
         "streaming": streaming,
+        "adaptive": adaptive,
     }
     if wanted:
         unknown = wanted - set(modules) - {"roofline"}

@@ -15,6 +15,12 @@ Usage (README-level):
     PYTHONPATH=src python examples/sa_pathology.py [--runs 48] [--tiles 4]
                                                    [--workers 2] [--size 72]
 
+    # Adaptive mode (DESIGN.md §11): a multi-round MOAT -> prune -> VBD ->
+    # refine study driven by repro.study.StudyDriver — one persistent
+    # Manager session and result store across rounds, each round planning
+    # only its delta against the cached trie:
+    PYTHONPATH=src python examples/sa_pathology.py --adaptive [--rounds 4]
+
     # Library form — dataset-level study in three lines:
     from repro.engine import ClusterSpec, execute_study, plan_study
     plan = plan_study(workflow, param_sets, policy="hybrid")
@@ -47,13 +53,52 @@ SPACE = ParamSpace.from_dict(
 )
 
 
+def run_adaptive(args) -> None:
+    """Adaptive multi-round study: screen, prune, quantify, refine — with
+    cross-round incremental planning and the persistent result store."""
+    from repro.app.pipeline import run_adaptive_study
+
+    tiles = [synthetic_tile(args.size, args.size, seed=t) for t in range(args.tiles)]
+    out = run_adaptive_study(
+        tiles,
+        space=SPACE,
+        max_rounds=args.rounds,
+        n_workers=args.workers,
+        seed=3,
+    )
+    print(
+        f"adaptive study: {out['rounds']} rounds, "
+        f"{out['tasks_executed']}/{out['tasks_requested']} tasks executed "
+        f"(reuse factor {out['reuse_factor']:.2f}x), "
+        f"cache {out['cache_hits']} hits / {out['cache_misses']} misses / "
+        f"{out['cache_spills']} spills, {out['wall_seconds']:.1f}s"
+    )
+    for r in out["rounds_detail"]:
+        known = f", {r['planned_known']} known from prior rounds" if r["planned_known"] else ""
+        print(
+            f"  [{r['kind']:6s}] {r['n_new']}/{r['n_proposed']} new runs, "
+            f"{r['tasks_executed']} tasks executed{known} — {r['decision'].get('reason', '')}"
+        )
+        ranking = r["analysis"].get("ranking")
+        if ranking:
+            print(f"           importance: {' > '.join(ranking[:6])}")
+    print(f"surviving parameters: {out['active']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--runs", type=int, default=48)
     ap.add_argument("--tiles", type=int, default=4)
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--size", type=int, default=72)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="multi-round adaptive study (MOAT -> prune -> VBD -> refine)")
+    ap.add_argument("--rounds", type=int, default=4, help="adaptive round budget")
     args = ap.parse_args()
+
+    if args.adaptive:
+        run_adaptive(args)
+        return
 
     sets, _ = morris_trajectories(SPACE, max(1, args.runs // (SPACE.dim + 1)), seed=3)
     sets = sets[: args.runs]

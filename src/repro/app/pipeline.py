@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.app import ops
 from repro.core import ParamSpace, StageSpec, TaskSpec, Workflow, dice
+from repro.core.metrics import reuse_factor
 from repro.core.params import ParamSet
 from repro.engine import (
     ClusterSpec,
@@ -39,6 +40,7 @@ __all__ = [
     "build_workflow",
     "run_study",
     "run_dataset_study",
+    "run_adaptive_study",
 ]
 
 # --------------------------------------------------------------------------
@@ -273,10 +275,13 @@ def run_study(
         "tasks_executed": result.tasks_executed,
         "planned_tasks_executed": plan.tasks_executed,
         "reuse_fraction": plan.reuse_fraction,
+        "reuse_factor": reuse_factor(result.tasks_executed, plan.tasks_total),
         "peak_bytes": plan.peak_bytes,
         "wall_seconds": wall,
         "reference_mask": np.asarray(ref_mask),
         "cache_hits": result.cache_hits,
+        "cache_misses": result.cache_misses,
+        "cache_spills": result.cache_spills,
         "plan": plan,
     }
 
@@ -336,6 +341,11 @@ def run_dataset_study(
         "tasks_executed": stream.tasks_executed,
         "planned_tasks_executed": plan.tasks_executed * len(images),
         "cache_hits": stream.cache_hits,
+        "cache_misses": stream.cache_misses,
+        "cache_spills": stream.cache_spills,
+        "reuse_factor": reuse_factor(
+            stream.tasks_executed, plan.tasks_total * len(images)
+        ),
         "throughput": stream.throughput,
         "parallel_efficiency": stream.parallel_efficiency,
         "manager_sessions": stream.manager_sessions,
@@ -345,4 +355,102 @@ def run_dataset_study(
         "reference_masks": [np.asarray(m) for m in ref_masks],
         "plan": plan,
         "stream": stream,
+    }
+
+
+def run_adaptive_study(
+    images: Sequence[np.ndarray],
+    *,
+    space: ParamSpace = TABLE1_SPACE,
+    max_rounds: int = 4,
+    strategy: str = "hybrid",
+    n_workers: int = 1,
+    seed: int = 0,
+    reference_params: Optional[ParamSet] = None,
+    n_trajectories: int = 2,
+    n_base: int = 4,
+    n_boot: int = 16,
+    costs: Optional[Dict[str, float]] = None,
+    store_dir: Optional[str] = None,
+    sa_policy: Optional[Any] = None,
+) -> Dict[str, Any]:
+    """Adaptive MOAT → prune → VBD → refine study over tiles (DESIGN.md §11).
+
+    A thin caller of :class:`repro.study.StudyDriver`: the objective is the
+    Dice *difference* (1 − Dice) of each run's segmentation vs the
+    default-parameter reference, averaged over tiles; rounds share one
+    Manager session, one result cache backed by the persistent store, and
+    plan only each round's delta against the cached trie. The summary
+    reports the study-wide reuse accounting (``reuse_factor``, cache
+    hit/miss/spill counters) alongside the per-round records.
+    """
+    from repro.study import (
+        MoatSampler,
+        RefinementSampler,
+        SaltelliSampler,
+        StudyDriver,
+    )
+
+    images = list(images)
+    if not images:
+        raise ValueError("run_adaptive_study needs at least one tile")
+    h, w = images[0].shape[:2]
+    if any(im.shape[:2] != (h, w) for im in images):
+        raise ValueError("all tiles must share one (h, w) shape")
+    wf = build_workflow(h, w, costs)
+    cluster = ClusterSpec(n_workers=n_workers)
+    raws = [{"raw": jnp.asarray(im)} for im in images]
+
+    ref_params = reference_params or space.default()
+    ref_plan = plan_study(wf, [ref_params], policy="rmsr", active_paths=1)
+    ref_stream = execute_study(ref_plan, raws, cluster=cluster)
+    ref_masks = [ref_stream.outputs[i][0]["mask"] for i in range(len(images))]
+
+    def objective(leaf_state: Any, input_index: int) -> float:
+        return 1.0 - float(dice(leaf_state["mask"], ref_masks[input_index]))
+
+    t0 = time.perf_counter()
+    driver = StudyDriver(
+        wf,
+        space,
+        raws,
+        objective=objective,
+        maximize=False,
+        seed=seed,
+        engine_policy=strategy,
+        cluster=cluster,
+        sa_policy=sa_policy,
+        samplers={
+            "moat": MoatSampler(n_trajectories),
+            "vbd": SaltelliSampler(n_base),
+            "refine": RefinementSampler(),
+        },
+        n_boot=n_boot,
+        input_keys=[f"tile{i}" for i in range(len(images))],
+        store_dir=store_dir,
+    )
+    try:
+        state = driver.run(max_rounds=max_rounds)
+        summary = driver.summary()
+    finally:
+        driver.close()
+    return {
+        **summary,
+        "wall_seconds": time.perf_counter() - t0,
+        "rounds_detail": [
+            {
+                "kind": r.kind,
+                "n_proposed": r.n_proposed,
+                "n_new": r.n_new,
+                "planned_tasks": r.planned_tasks,
+                "planned_known": r.planned_known,
+                "tasks_executed": r.tasks_executed,
+                "cache_hits": r.cache_hits,
+                "analysis": r.analysis,
+                "decision": r.decision,
+            }
+            for r in state.rounds
+        ],
+        "reference_masks": [np.asarray(m) for m in ref_masks],
+        "state": state,
     }

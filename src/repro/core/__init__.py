@@ -32,6 +32,8 @@ from repro.core.rmsr import (  # noqa: F401
     tree_peak_bytes,
 )
 from repro.core.sa import (  # noqa: F401
+    MoatResult,
+    VbdResult,
     correlation_indices,
     moat_indices,
     saltelli_sample,
@@ -41,5 +43,6 @@ from repro.core.metrics import (  # noqa: F401
     dice,
     jaccard,
     parallel_efficiency,
+    reuse_factor,
     throughput,
 )

@@ -14,12 +14,27 @@ __all__ = [
     "jaccard",
     "throughput",
     "parallel_efficiency",
+    "reuse_factor",
 ]
 
 
 def throughput(n_items: int, wall_seconds: float) -> float:
     """Completed work items (tiles, batches) per second of wall-clock."""
     return n_items / wall_seconds if wall_seconds > 0 else 0.0
+
+
+def reuse_factor(tasks_executed: int, tasks_requested: int) -> float:
+    """How many requested task executions each actual execution amortised.
+
+    ``tasks_requested`` is the study's naive task count (runs × tasks,
+    summed over rounds for adaptive studies); ``tasks_executed`` the
+    measured count after dedup, trie merging and result-cache/-store hits.
+    1.0 means no reuse; the paper's Table II "Reuse" column is the same
+    quantity expressed as a fraction, ``1 - 1/reuse_factor``.
+    """
+    if tasks_executed <= 0:
+        return float("inf") if tasks_requested > 0 else 1.0
+    return tasks_requested / tasks_executed
 
 
 def parallel_efficiency(

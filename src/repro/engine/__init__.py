@@ -20,6 +20,6 @@ from repro.engine.types import (  # noqa: F401
     StudyResult,
     StudyStreamResult,
 )
-from repro.engine.planner import plan_study  # noqa: F401
+from repro.engine.planner import TrieLedger, plan_study  # noqa: F401
 from repro.engine.executor import ResultCache, execute_bucket, execute_plan  # noqa: F401
 from repro.engine.streaming import execute_study  # noqa: F401

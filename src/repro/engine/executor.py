@@ -26,6 +26,7 @@ from typing import Any, Dict, Optional, Tuple
 
 from repro.core.rmsr import replay_schedule
 from repro.engine.types import BucketPlan, ClusterSpec, StudyPlan, StudyResult
+from repro.runtime.storage import HierarchicalStore
 
 __all__ = ["ResultCache", "execute_bucket", "execute_plan"]
 
@@ -35,11 +36,30 @@ class ResultCache:
 
     Entries are weighted by the task's declared ``output_bytes`` (the same
     model the schedule's liveness proof uses); an entry larger than the cap
-    is never admitted.
+    is never admitted to the RAM tier.
+
+    With a ``spill_store`` (a :class:`repro.runtime.HierarchicalStore`), the
+    cache becomes the top of a hierarchy instead of a discard-on-evict LRU:
+    evicted and oversized entries are *spilled* to the store (RAM tier +
+    content-addressed npz disk tier), and a RAM miss consults the store
+    before reporting failure — a rehydrated entry counts as a hit and is
+    served from the store (which promotes disk reads into its own
+    LRU-bounded RAM tier) without re-entering this cache's declared-bytes
+    accounting. This is what carries results across adaptive-study rounds
+    and across process restarts (``repro.study``): the store's disk keys
+    are content-addressed, so a cache rebuilt over the same directory
+    resolves prior-round results instead of recomputing them.
+
+    Counters: ``hits`` (successful lookups, either tier), ``rehydrations``
+    (the subset served by the spill store), ``misses`` (failed lookups) and
+    ``spills`` (entries written to the store on eviction/oversize).
     """
 
-    def __init__(self, max_bytes: int):
+    def __init__(
+        self, max_bytes: int, *, spill_store: Optional[HierarchicalStore] = None
+    ):
         self.max_bytes = int(max_bytes)
+        self.spill_store = spill_store
         self._entries: "collections.OrderedDict[Tuple, Tuple[Any, int]]" = (
             collections.OrderedDict()
         )
@@ -47,6 +67,15 @@ class ResultCache:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self.spills = 0
+        self.rehydrations = 0
+
+    @staticmethod
+    def _store_key(key: Tuple) -> str:
+        # repr of the canonical key tuple (strings / numbers / nested
+        # tuples) is deterministic across processes; the store content-
+        # addresses it on disk (storage.stable_key).
+        return repr(key)
 
     def get(self, key: Tuple) -> Tuple[bool, Any]:
         with self._lock:
@@ -54,22 +83,67 @@ class ResultCache:
                 self._entries.move_to_end(key)
                 self.hits += 1
                 return True, self._entries[key][0]
+        # store consultation happens OUTSIDE the cache lock: rehydration can
+        # be a disk read, and holding the cache-wide lock across it would
+        # serialize every worker's cache access behind one npz load.
+        if self.spill_store is not None:
+            value = self.spill_store.get(self._store_key(key))
+            if value is not None:
+                # served without re-admission: the declared output_bytes
+                # that governed admission is not recoverable here, and
+                # re-admitting by measured size would let a deliberately
+                # oversized entry slip into the RAM tier. Repeated reads
+                # stay cheap — the store promotes disk hits into its own
+                # LRU-bounded RAM tier.
+                with self._lock:
+                    self.hits += 1
+                    self.rehydrations += 1
+                return True, value
+        with self._lock:
             self.misses += 1
-            return False, None
+        return False, None
+
+    def _spill_locked(self, key: Tuple, value: Any) -> None:
+        if self.spill_store is not None:
+            self.spills += 1
+            self.spill_store.put(self._store_key(key), value)
+
+    def _admit_locked(self, key: Tuple, value: Any, nbytes: int) -> None:
+        if nbytes > self.max_bytes:
+            return
+        self._entries[key] = (value, nbytes)
+        self._bytes += nbytes
+        while self._bytes > self.max_bytes and self._entries:
+            k, (v, b) = self._entries.popitem(last=False)
+            self._bytes -= b
+            self._spill_locked(k, v)
 
     def put(self, key: Tuple, value: Any, nbytes: int) -> None:
         nbytes = max(0, int(nbytes))
-        if nbytes > self.max_bytes:
-            return
         with self._lock:
             if key in self._entries:
                 self._entries.move_to_end(key)
                 return
-            self._entries[key] = (value, nbytes)
-            self._bytes += nbytes
-            while self._bytes > self.max_bytes and self._entries:
-                _, (_, b) = self._entries.popitem(last=False)
-                self._bytes -= b
+            if nbytes > self.max_bytes:
+                # never admitted to RAM, but too valuable to drop when a
+                # spill tier exists (it may be a whole merged prefix)
+                self._spill_locked(key, value)
+                return
+            self._admit_locked(key, value, nbytes)
+
+    def flush(self) -> None:
+        """Write every live entry through to the spill store's **disk**
+        tier (durability barrier before persisting a StudyState): the
+        cache's RAM entries are pushed into the store, then the store's own
+        RAM tier — which also holds previously-evicted entries that never
+        reached disk — is persisted wholesale. No-op without a spill store;
+        entries stay admitted."""
+        if self.spill_store is None:
+            return
+        with self._lock:
+            for key, (value, _) in self._entries.items():
+                self.spill_store.put(self._store_key(key), value)
+        self.spill_store.persist_all()
 
 
 def execute_bucket(
@@ -123,4 +197,7 @@ def execute_plan(
         backups_launched=stream.backups_launched,
         wall_seconds=stream.wall_seconds,
         per_stage_executed=only.per_stage_executed,
+        cache_misses=stream.cache_misses,
+        cache_spills=stream.cache_spills,
+        cache_rehydrations=stream.cache_rehydrations,
     )

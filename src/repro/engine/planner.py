@@ -30,7 +30,7 @@ many inputs (tiles, prompt batches) via ``execute_plan``.
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.core.params import ParamSet
 from repro.core.reuse import build_reuse_tree
@@ -47,9 +47,78 @@ from repro.engine.types import (
     StudyPlan,
 )
 
-__all__ = ["plan_study"]
+__all__ = ["TrieLedger", "plan_study"]
 
 _ALL_ELIGIBLE = 10**9  # "unbounded workers": RTMA's whole frontier is live
+
+
+class TrieLedger:
+    """Cross-round record of planned trie paths — the "cached trie" an
+    adaptive study plans its delta against (DESIGN.md §11).
+
+    Members are the deterministic ``repr`` of the executor's input-agnostic
+    cache keys (``bucket.cache_scope + (trie-path,)``), so ledger membership
+    means exactly: *a prior plan scheduled this merged task, and the
+    persistent result store holds (or held) its output*. ``plan_study``
+    consults the ledger to annotate each bucket's ``known_nodes`` — the
+    plan-time prediction of which merged tasks the store will serve — and
+    records the rest, making the next round's plan incremental too.
+
+    The ledger is a plain string set, so it serialises into a StudyState
+    checkpoint losslessly (``to_list``/``from_list``).
+    """
+
+    def __init__(self, entries: Optional[Iterable[str]] = None):
+        self._seen: Set[str] = set(entries or ())
+
+    def __len__(self) -> int:
+        return len(self._seen)
+
+    def __contains__(self, key: Tuple) -> bool:
+        return repr(key) in self._seen
+
+    def add_all(self, keys: Iterable[Tuple]) -> None:
+        self._seen.update(repr(k) for k in keys)
+
+    def to_list(self) -> List[str]:
+        return sorted(self._seen)
+
+    @classmethod
+    def from_list(cls, entries: Iterable[str]) -> "TrieLedger":
+        return cls(entries)
+
+
+def _annotate_with_ledger(
+    stage_plans: List[StagePlan], ledger: TrieLedger
+) -> List[Tuple]:
+    """Mark each bucket's trie nodes as known/new against the ledger.
+
+    Knownness is assessed against the ledger *at entry* (prior rounds), not
+    against siblings of this plan — intra-plan duplicate prefixes are the
+    run-level cache's business and are already visible in the measured
+    hit counters. Returns the plan's NEW keys; the caller commits them to
+    the ledger only once the plan has actually executed (ledger membership
+    means "the store holds, or held, this output" — a plan that fails
+    mid-execution must not poison the next round's accounting).
+    """
+    new_keys: List[Tuple] = []
+    for sp in stage_plans:
+        for bucket in sp.buckets:
+            known = 0
+            stack: List[Tuple[Any, Tuple]] = [
+                (child, ()) for child in bucket.tree.root.children.values()
+            ]
+            while stack:
+                node, prefix = stack.pop()
+                pk = prefix + (node.key,)
+                full = bucket.cache_scope + (pk,)
+                if full in ledger:
+                    known += 1
+                else:
+                    new_keys.append(full)
+                stack.extend((c, pk) for c in node.children.values())
+            bucket.known_nodes = known
+    return new_keys
 
 
 def _rtma_bucket_size(
@@ -151,12 +220,25 @@ def plan_study(
     max_bucket_size: Optional[int] = None,
     active_paths: Optional[int] = None,
     workers: Optional[int] = None,
+    ledger: Optional[TrieLedger] = None,
 ) -> StudyPlan:
     """Plan an SA study: stage-level dedup, per-stage reuse trees, pluggable
     bucketing, AOT schedules with exact peak-bytes, and multi-stage routing.
 
     ``workers`` only parameterises the breadth-eligible (RTMA) makespan
     model; ``active_paths`` overrides the budget-solved RMSR bound.
+
+    **Incremental path** (adaptive multi-round studies, DESIGN.md §11):
+    passing a :class:`TrieLedger` makes the plan *delta-aware*. Callers
+    (``repro.study.StudyDriver``) first drop ParamSets whose outputs prior
+    rounds already produced, so ``param_sets`` is the round's delta
+    run-list; the ledger then annotates every bucket with ``known_nodes`` —
+    trie paths a prior round planned, whose outputs the persistent result
+    store will serve as cache hits — and ``plan.tasks_new`` is the true
+    marginal work of this round. The plan's not-yet-known keys are staged
+    on ``plan.ledger_pending``; callers commit them with
+    ``ledger.add_all(plan.ledger_pending)`` after the plan executes
+    successfully, so a failed round never records phantom results.
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; expected one of {POLICIES}")
@@ -192,6 +274,10 @@ def plan_study(
         for inst in instances:
             upstream[inst.run_id] = upstream[inst.run_id] + (inst.task_keys(),)
 
+    ledger_pending = (
+        _annotate_with_ledger(stage_plans, ledger) if ledger is not None else None
+    )
+
     return StudyPlan(
         workflow=workflow,
         n_runs=len(param_sets),
@@ -199,4 +285,5 @@ def plan_study(
         stages=stage_plans,
         memory=memory,
         cluster=cluster,
+        ledger_pending=ledger_pending,
     )

@@ -66,6 +66,10 @@ def execute_study(
     inputs: Sequence[Any],
     *,
     cluster: Optional[ClusterSpec] = None,
+    cache: Optional[ResultCache] = None,
+    manager: Optional[Manager] = None,
+    input_keys: Optional[Sequence[Any]] = None,
+    key_prefix: str = "",
 ) -> StudyStreamResult:
     """Execute a :class:`StudyPlan` on every input in ``inputs``, pipelined
     through one persistent Manager session.
@@ -75,33 +79,76 @@ def execute_study(
     alone, and the result cache carries an input-scoped key segment. The
     first permanently-failed bucket (Manager retries exhausted) aborts the
     study after the session drains, re-raising the original exception.
+
+    Multi-round (adaptive-study) extensions, all default-off:
+
+    * ``cache``     — an external, round-persistent :class:`ResultCache`
+      (optionally spill-store-backed). Honoured only when the plan's policy
+      admits caching (``plan.cache_enabled``), so the ``none``/``stage``
+      baselines stay honest. Without it a fresh per-study cache is built.
+    * ``manager``   — an external, already-``start``-ed Manager session to
+      submit into; the session is drained but left running for the next
+      round. Accounting (retries, backups, busy seconds) reports this
+      call's delta, and ``manager_sessions`` is 0 (no session started
+      here).
+    * ``input_keys``— stable per-input identities for the cache's input
+      scope segment (default: the positional index). Required for
+      cross-round reuse: round *N*'s "tile «a»" must key identically to
+      round 1's.
+    * ``key_prefix``— disambiguates WorkItem keys inside a shared session
+      (the Manager memoises results by key, so two rounds submitting
+      ``in0:…`` verbatim would collide).
     """
     cluster = cluster or plan.cluster or ClusterSpec()
     inputs = list(inputs)
-    cache = (
-        ResultCache(plan.memory.effective_cache_bytes) if plan.cache_enabled else None
-    )
-    mgr = Manager(
-        max_attempts=cluster.max_attempts,
-        heartbeat_timeout=cluster.heartbeat_timeout,
-        straggler_factor=cluster.straggler_factor,
-        enable_backup_tasks=cluster.enable_backup_tasks,
+    if input_keys is None:
+        input_keys = list(range(len(inputs)))
+    else:
+        input_keys = list(input_keys)
+        if len(input_keys) != len(inputs):
+            raise ValueError("input_keys must align 1:1 with inputs")
+    if not plan.cache_enabled:
+        cache = None
+    elif cache is None:
+        cache = ResultCache(plan.memory.effective_cache_bytes)
+    if manager is None:
+        owns_manager = True
+        mgr = Manager(
+            max_attempts=cluster.max_attempts,
+            heartbeat_timeout=cluster.heartbeat_timeout,
+            straggler_factor=cluster.straggler_factor,
+            enable_backup_tasks=cluster.enable_backup_tasks,
+        )
+    else:
+        owns_manager = False
+        mgr = manager
+        if not mgr.is_running:
+            raise RuntimeError("external Manager session must be started")
+    retries0, backups0, busy0 = mgr.retries, mgr.backups_launched, mgr.busy_seconds
+    cache0 = (
+        (cache.misses, cache.spills, cache.rehydrations)
+        if cache is not None
+        else (0, 0, 0)
     )
     states = [_InputState(plan, inp) for inp in inputs]
     errors: List[BaseException] = []
     lock = threading.Lock()
     n_stages = len(plan.stages)
 
+    submitted: List[str] = []  # list.append is atomic; drained before reads
+
     def submit_stage(i: int, si: int) -> None:
         stage_plan = plan.stages[si]
         st = states[i]
         for bi, bucket in enumerate(stage_plan.buckets):
             src = st.current[bucket.run_ids[0]]
+            key = f"{key_prefix}in{i}:{stage_plan.index}:{stage_plan.stage.name}:{bi}"
+            submitted.append(key)
             mgr.submit(
                 WorkItem(
-                    key=f"in{i}:{stage_plan.index}:{stage_plan.stage.name}:{bi}",
-                    fn=lambda b=bucket, s=src, i=i: execute_bucket(
-                        b, s, cache, scope=("input", i) + b.cache_scope
+                    key=key,
+                    fn=lambda b=bucket, s=src, k=input_keys[i]: execute_bucket(
+                        b, s, cache, scope=("input", k) + b.cache_scope
                     ),
                     callback=lambda _key, value, i=i, si=si: on_bucket(i, si, value),
                 )
@@ -144,14 +191,20 @@ def execute_study(
             submit_stage(i, si + 1)
 
     t0 = time.perf_counter()
-    mgr.start(cluster.n_workers)
+    if owns_manager:
+        mgr.start(cluster.n_workers)
     try:
         for i in range(len(inputs)):
             states[i].t_submit = time.perf_counter()
             submit_stage(i, 0)
         mgr.drain()
     finally:
-        mgr.close()
+        if owns_manager:
+            mgr.close()
+        else:
+            # shared session: outputs were consumed via callbacks; release
+            # the memoised results so a many-round study stays bounded
+            mgr.forget(submitted)
     if errors:
         raise errors[0]
     wall = time.perf_counter() - t0
@@ -175,9 +228,14 @@ def execute_study(
         n_workers=cluster.n_workers,
         tasks_executed=sum(r.tasks_executed for r in per_input),
         cache_hits=sum(r.cache_hits for r in per_input),
-        retries=mgr.retries,
-        backups_launched=mgr.backups_launched,
+        retries=mgr.retries - retries0,
+        backups_launched=mgr.backups_launched - backups0,
         wall_seconds=wall,
-        busy_seconds=mgr.busy_seconds,
-        manager_sessions=1,
+        busy_seconds=mgr.busy_seconds - busy0,
+        manager_sessions=1 if owns_manager else 0,
+        cache_misses=(cache.misses - cache0[0]) if cache is not None else 0,
+        cache_spills=(cache.spills - cache0[1]) if cache is not None else 0,
+        cache_rehydrations=(
+            (cache.rehydrations - cache0[2]) if cache is not None else 0
+        ),
     )

@@ -97,6 +97,10 @@ class BucketPlan:
     schedule: ScheduleResult
     active_paths: int
     discipline: str  # "lifo" (RMSR depth-first) | "fifo" (RTMA breadth-eligible)
+    # Trie nodes of this bucket already recorded in the TrieLedger at plan
+    # time (prior-round work the persistent result store will serve as
+    # hits); 0 for non-incremental plans.
+    known_nodes: int = 0
 
     @property
     def run_ids(self) -> List[int]:
@@ -121,6 +125,10 @@ class StagePlan:
         return sum(b.tree.unique_task_count() for b in self.buckets)
 
     @property
+    def tasks_known(self) -> int:
+        return sum(b.known_nodes for b in self.buckets)
+
+    @property
     def peak_bytes(self) -> int:
         return max((b.schedule.peak_bytes for b in self.buckets), default=0)
 
@@ -141,6 +149,10 @@ class StudyPlan:
     stages: List[StagePlan]
     memory: MemoryBudget
     cluster: Optional[ClusterSpec] = None
+    # Incremental planning (plan_study(..., ledger=...)): cache keys this
+    # plan introduces that the TrieLedger did not know. The caller commits
+    # them (ledger.add_all) once the plan has executed successfully.
+    ledger_pending: Optional[List[Tuple[Any, ...]]] = None
 
     @property
     def tasks_total(self) -> int:
@@ -149,6 +161,18 @@ class StudyPlan:
     @property
     def tasks_executed(self) -> int:
         return sum(s.tasks_executed for s in self.stages)
+
+    @property
+    def tasks_known(self) -> int:
+        """Merged tasks already in the cross-round TrieLedger at plan time
+        (expected to be served by the persistent result store)."""
+        return sum(s.tasks_known for s in self.stages)
+
+    @property
+    def tasks_new(self) -> int:
+        """The incremental-plan delta: merged tasks this plan introduces on
+        top of what prior rounds already computed."""
+        return self.tasks_executed - self.tasks_known
 
     @property
     def reuse_fraction(self) -> float:
@@ -197,6 +221,11 @@ class StudyResult:
     backups_launched: int
     wall_seconds: float
     per_stage_executed: List[int] = dataclasses.field(default_factory=list)
+    # run-level ResultCache deltas for this execution (0 when caching is
+    # disabled): misses, spill-tier writes, and store rehydrations.
+    cache_misses: int = 0
+    cache_spills: int = 0
+    cache_rehydrations: int = 0
 
 
 @dataclasses.dataclass
@@ -226,6 +255,12 @@ class StudyStreamResult:
     wall_seconds: float
     busy_seconds: float
     manager_sessions: int = 1
+    # run-level ResultCache deltas for this study (0 when caching is
+    # disabled); with an external round-persistent cache these are THIS
+    # call's contribution, not the cache's lifetime totals.
+    cache_misses: int = 0
+    cache_spills: int = 0
+    cache_rehydrations: int = 0
 
     @property
     def throughput(self) -> float:

@@ -100,6 +100,12 @@ class Manager:
         self.heartbeat_expiries = 0
 
     @property
+    def is_running(self) -> bool:
+        """True between ``start`` and ``close`` — i.e. the session can
+        accept submissions and execute them."""
+        return bool(self._threads)
+
+    @property
     def busy_seconds(self) -> float:
         """Sum of winning-attempt wall-times — the useful-work numerator of
         the parallel-efficiency accounting."""
@@ -169,6 +175,32 @@ class Manager:
     def results(self) -> Dict[str, Any]:
         with self._lock:
             return dict(self._results)
+
+    def forget(self, keys) -> None:
+        """Release memoised results + attempt bookkeeping for keys whose
+        lifecycle is over (drained, consumed). A long-lived session would
+        otherwise retain every settled WorkItem's value for its whole life
+        — the streaming executor calls this per study when sharing a
+        session across an adaptive study's rounds.
+
+        Two races are closed under the lock: stale queued duplicates of a
+        forgotten key (heartbeat-expiry re-enqueues) are purged — without
+        their memoised result they would re-execute — and a key whose
+        losing attempt (straggler backup / presumed-dead original) still
+        holds a lease keeps its result, so the late completion dedups via
+        first-completion-wins instead of resurrecting a value."""
+        with self._cond:
+            keyset = set(keys)
+            if not keyset:
+                return
+            self._queue = collections.deque(
+                it for it in self._queue if it.key not in keyset
+            )
+            leased = {it.key for it in self._running.values()}
+            for k in keyset - leased:
+                self._results.pop(k, None)
+                self._attempt_seq.pop(k, None)
+                self._callbacks.pop(k, None)
 
     # ------------------------------------------------------------------
     # Worker protocol

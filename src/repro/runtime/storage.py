@@ -3,15 +3,25 @@ disk tiers managed by the runtime; stages communicate by reading/writing
 data objects rather than messaging).
 
 The RAM tier is capacity-bounded; overflowing objects spill to the disk tier
-(npz files). The RMSR schedule exists precisely to keep the working set inside
-the RAM tier — the paper notes that spilling every task output of a
-fine-grain stage costs more than recomputing (§III), which is why memory-
-bounded scheduling beats a disk cache.
+(npz files). Disk filenames are **content-addressed** — the sha256 of the
+(deterministically serialised) key — so a store re-opened on the same
+directory by a *different process* resolves the same keys to the same files
+(Python's built-in ``hash`` is salted per process and is useless here).
+This is what lets a resumed SA study (``repro.study.StudyState``) rehydrate
+prior-round results instead of recomputing them.
+
+The RMSR schedule exists precisely to keep the working set inside the RAM
+tier — the paper notes that spilling every task output of a fine-grain stage
+costs more than recomputing (§III), which is why memory-bounded scheduling
+beats a disk cache for *intra-round* traffic; the disk tier earns its keep
+across rounds and process restarts, where recomputation would repeat whole
+stages.
 """
 
 from __future__ import annotations
 
 import collections
+import hashlib
 import pathlib
 import tempfile
 import threading
@@ -19,10 +29,26 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
-__all__ = ["HierarchicalStore"]
+__all__ = ["HierarchicalStore", "stable_key"]
+
+
+def stable_key(key: Any) -> str:
+    """Deterministic content address of a (possibly nested-tuple) key.
+
+    ``repr`` of the canonical key types used by the engine cache — strings,
+    ints, floats, bools and tuples thereof — is stable across processes,
+    unlike ``hash``. sha256 keeps filenames short and collision-free.
+    """
+    return hashlib.sha256(repr(key).encode()).hexdigest()
 
 
 class HierarchicalStore:
+    """RAM tier (LRU, byte-bounded) over a content-addressed npz disk tier.
+
+    ``hits`` counts RAM-tier hits, ``disk_hits`` disk-tier rehydrations,
+    ``misses`` keys found in neither tier, ``spills`` RAM→disk evictions.
+    """
+
     def __init__(self, ram_bytes: int = 1 << 30, disk_dir: Optional[str] = None):
         self.ram_bytes = ram_bytes
         self._ram: "collections.OrderedDict[str, Any]" = collections.OrderedDict()
@@ -33,7 +59,12 @@ class HierarchicalStore:
         self._lock = threading.Lock()
         self.spills = 0
         self.hits = 0
+        self.disk_hits = 0
         self.misses = 0
+
+    @property
+    def disk_dir(self) -> str:
+        return str(self._disk)
 
     @staticmethod
     def _nbytes(obj: Any) -> int:
@@ -43,8 +74,14 @@ class HierarchicalStore:
             return sum(HierarchicalStore._nbytes(v) for v in obj.values())
         return 64
 
+    def _path(self, key: str) -> pathlib.Path:
+        return self._disk / f"{stable_key(key)}.npz"
+
     def put(self, key: str, obj: Any) -> None:
         with self._lock:
+            if key in self._ram:
+                self._used -= self._sizes.pop(key)
+                del self._ram[key]
             size = self._nbytes(obj)
             self._evict_for(size)
             self._ram[key] = obj
@@ -52,17 +89,39 @@ class HierarchicalStore:
             self._sizes[key] = size
             self._used += size
 
+    def _write_disk(self, key: str, v: Any) -> None:
+        path = self._path(key)
+        if isinstance(v, dict):
+            np.savez(path, **{kk: np.asarray(vv) for kk, vv in v.items()})
+        else:
+            np.savez(path, __value__=np.asarray(v))
+        (self._disk / f"{stable_key(key)}.key").write_text(key)
+
     def _evict_for(self, incoming: int) -> None:
         while self._used + incoming > self.ram_bytes and self._ram:
             k, v = self._ram.popitem(last=False)  # LRU
             self._used -= self._sizes.pop(k)
             self.spills += 1
-            path = self._disk / f"{abs(hash(k))}.npz"
-            if isinstance(v, dict):
-                np.savez(path, **{kk: np.asarray(vv) for kk, vv in v.items()})
-            else:
-                np.savez(path, __value__=np.asarray(v))
-            (self._disk / f"{abs(hash(k))}.key").write_text(k)
+            self._write_disk(k, v)
+
+    def persist(self, key: str) -> None:
+        """Write a RAM-resident object to the disk tier without evicting it
+        (a durability flush, e.g. before a StudyState checkpoint)."""
+        with self._lock:
+            if key in self._ram:
+                self._write_disk(key, self._ram[key])
+
+    def persist_all(self) -> None:
+        """Write every RAM-resident object to the disk tier (durability
+        barrier: after this, a store re-opened on the directory resolves
+        everything this one holds)."""
+        with self._lock:
+            for k, v in self._ram.items():
+                self._write_disk(k, v)
+
+    def contains(self, key: str) -> bool:
+        with self._lock:
+            return key in self._ram or self._path(key).exists()
 
     def get(self, key: str) -> Optional[Any]:
         with self._lock:
@@ -70,13 +129,23 @@ class HierarchicalStore:
                 self.hits += 1
                 self._ram.move_to_end(key)
                 return self._ram[key]
-            path = self._disk / f"{abs(hash(key))}.npz"
+            path = self._path(key)
             if path.exists():
-                self.misses += 1
+                self.disk_hits += 1
                 with np.load(path) as z:
                     if "__value__" in z:
-                        return z["__value__"]
-                    return {k: z[k] for k in z.files}
+                        value: Any = z["__value__"]
+                    else:
+                        value = {k: z[k] for k in z.files}
+                # promote into the (LRU-bounded) RAM tier: a hot spilled
+                # entry must not pay deserialisation on every read
+                size = self._nbytes(value)
+                self._evict_for(size)
+                self._ram[key] = value
+                self._sizes[key] = size
+                self._used += size
+                return value
+            self.misses += 1
             return None
 
     def delete(self, key: str) -> None:
@@ -84,7 +153,7 @@ class HierarchicalStore:
             if key in self._ram:
                 self._used -= self._sizes.pop(key)
                 del self._ram[key]
-            path = self._disk / f"{abs(hash(key))}.npz"
+            path = self._path(key)
             if path.exists():
                 path.unlink()
 

@@ -1,0 +1,23 @@
+"""Adaptive multi-round SA driver — the science loop above the engine
+(DESIGN.md §11).
+
+``StudyDriver`` runs rounds of propose → evaluate → analyze → decide over a
+round-persistent ``StudyState``: a pluggable sampler proposes ParamSets,
+the engine executes only the round's *delta* (incremental planning against
+the cached trie, one persistent Manager session, a store-backed result
+cache that survives eviction and process restarts), ``core.sa`` computes
+indices with bootstrap CIs, and a pluggable policy prunes / refines /
+stops. The canonical workflow is MOAT screening → VBD on the survivors →
+grid refinement, plus a coordinate-descent ``tune`` mode.
+"""
+
+from repro.study.driver import StudyDriver  # noqa: F401
+from repro.study.policies import Decision, ScreenThenRefinePolicy  # noqa: F401
+from repro.study.samplers import (  # noqa: F401
+    MoatSampler,
+    RefinementSampler,
+    SaltelliSampler,
+    active_space,
+    complete,
+)
+from repro.study.state import RoundRecord, StudyState  # noqa: F401

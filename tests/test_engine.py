@@ -251,6 +251,76 @@ class TestResultCache:
         hit, _ = cache.get(("big",))
         assert not hit
 
+    def test_eviction_spills_to_store_and_rehydrates(self):
+        from repro.runtime import HierarchicalStore
+
+        store = HierarchicalStore(ram_bytes=1 << 20)
+        cache = ResultCache(100, spill_store=store)
+        cache.put(("a",), 1.0, 60)
+        cache.put(("b",), 2.0, 60)  # evicts ("a",) -> spilled, not dropped
+        assert cache.spills == 1
+        hit_a, val_a = cache.get(("a",))
+        assert hit_a and float(val_a) == 1.0
+        assert cache.rehydrations == 1
+        assert cache.hits == 1 and cache.misses == 0
+
+    def test_oversized_entry_spills_when_store_present(self):
+        from repro.runtime import HierarchicalStore
+
+        cache = ResultCache(10, spill_store=HierarchicalStore(ram_bytes=1 << 20))
+        cache.put(("big",), 7.0, 100)
+        assert cache.spills == 1
+        hit, val = cache.get(("big",))
+        assert hit and float(val) == 7.0
+
+    def test_flush_persists_ram_entries_to_disk(self, tmp_path):
+        from repro.runtime import HierarchicalStore
+
+        store = HierarchicalStore(ram_bytes=1 << 20, disk_dir=str(tmp_path))
+        cache = ResultCache(1 << 10, spill_store=store)
+        cache.put(("x",), 3.0, 8)
+        cache.flush()
+        # a cold cache over a re-opened store resolves the key from disk
+        cold = ResultCache(
+            1 << 10,
+            spill_store=HierarchicalStore(ram_bytes=1 << 20, disk_dir=str(tmp_path)),
+        )
+        hit, val = cold.get(("x",))
+        assert hit and float(val) == 3.0 and cold.rehydrations == 1
+
+    def test_flush_also_persists_previously_evicted_entries(self, tmp_path):
+        """An entry evicted into the store's RAM tier before flush() must
+        still reach disk: resume would otherwise silently recompute exactly
+        the entries that eviction produced."""
+        from repro.runtime import HierarchicalStore
+
+        store = HierarchicalStore(ram_bytes=1 << 20, disk_dir=str(tmp_path))
+        cache = ResultCache(100, spill_store=store)
+        cache.put(("a",), 1.0, 60)
+        cache.put(("b",), 2.0, 60)  # evicts ("a",) -> store RAM tier only
+        cache.flush()
+        cold = ResultCache(
+            100,
+            spill_store=HierarchicalStore(ram_bytes=1 << 20, disk_dir=str(tmp_path)),
+        )
+        for key, want in ((("a",), 1.0), (("b",), 2.0)):
+            hit, val = cold.get(key)
+            assert hit and float(val) == want, key
+
+    def test_rehydration_does_not_readmit_oversized_entries(self):
+        """A deliberately-never-admitted entry (declared bytes > cap) must
+        not slip into the RAM tier via a store round-trip: the declared
+        byte model governs admission, not the measured payload size."""
+        from repro.runtime import HierarchicalStore
+
+        cache = ResultCache(10, spill_store=HierarchicalStore(ram_bytes=1 << 20))
+        cache.put(("big",), 7.0, 100)  # spilled, never admitted
+        for expect_rehydrations in (1, 2):
+            hit, val = cache.get(("big",))
+            assert hit and float(val) == 7.0
+            assert cache.rehydrations == expect_rehydrations  # still not RAM
+        assert cache._bytes == 0
+
 
 class TestRTMAEdgeCases:
     def test_max_bucket_size_one(self):

@@ -63,6 +63,21 @@ class TestManager:
         assert out["strag"] in ("fast", "slow")
         assert mgr.backups_launched >= 1
 
+    def test_forget_releases_results_but_respects_races(self):
+        """forget drops settled results + purges stale queued duplicates,
+        but keeps a key whose losing attempt still holds a lease (the late
+        completion must dedup, not resurrect)."""
+        mgr = Manager()
+        mgr._results["done"] = 1
+        mgr._attempt_seq["done"] = 1
+        mgr._queue.append(WorkItem(key="done", fn=lambda: 2))  # stale retry
+        mgr._results["racing"] = 3
+        mgr._attempt_seq["racing"] = 2
+        mgr._running["racing#2"] = WorkItem(key="racing", fn=lambda: 3, attempts=2)
+        mgr.forget(["done", "racing"])
+        assert "done" not in mgr._results and not mgr._queue
+        assert mgr._results["racing"] == 3  # lease outstanding: kept
+
     def test_cluster_sim_efficiency_degrades_gracefully(self):
         costs = [1.0] * 10000
         base = simulate_cluster(costs, n_nodes=1)
@@ -88,6 +103,43 @@ class TestStorage:
             got = st.get(k)
             assert got is not None
             np.testing.assert_array_equal(np.asarray(got), v)
+
+    def test_content_addressed_keys_survive_reopen(self, tmp_path):
+        """Disk filenames are content-addressed (sha256 of the key), so a
+        store re-opened on the same directory — by another process, with a
+        different hash seed — resolves the same keys. This is the property
+        the adaptive-study resume path relies on."""
+        a = np.arange(40, dtype=np.float32)
+        st = HierarchicalStore(ram_bytes=1 << 20, disk_dir=str(tmp_path))
+        st.put("((0, 'seg', ()), (('p0', 1.5),))", a)
+        st.persist("((0, 'seg', ()), (('p0', 1.5),))")
+        st2 = HierarchicalStore(ram_bytes=1 << 20, disk_dir=str(tmp_path))
+        got = st2.get("((0, 'seg', ()), (('p0', 1.5),))")
+        np.testing.assert_array_equal(np.asarray(got), a)
+        assert st2.disk_hits == 1 and st2.hits == 0
+        assert st2.get("missing") is None and st2.misses == 1
+
+    def test_disk_hit_promoted_to_ram_tier(self, tmp_path):
+        a = np.arange(16, dtype=np.float32)
+        st = HierarchicalStore(ram_bytes=1 << 20, disk_dir=str(tmp_path))
+        st.put("k", a)
+        st.persist("k")
+        st2 = HierarchicalStore(ram_bytes=1 << 20, disk_dir=str(tmp_path))
+        np.testing.assert_array_equal(np.asarray(st2.get("k")), a)
+        assert st2.disk_hits == 1
+        np.testing.assert_array_equal(np.asarray(st2.get("k")), a)
+        assert st2.disk_hits == 1 and st2.hits == 1  # second read: RAM
+
+    def test_dict_payload_roundtrip_through_disk(self, tmp_path):
+        st = HierarchicalStore(ram_bytes=1 << 20, disk_dir=str(tmp_path))
+        state = {"mask": np.ones((4, 4), bool), "gray": np.eye(4, dtype=np.float32)}
+        st.put("s", state)
+        st.persist("s")
+        st2 = HierarchicalStore(ram_bytes=1 << 20, disk_dir=str(tmp_path))
+        got = st2.get("s")
+        assert set(got) == {"mask", "gray"}
+        np.testing.assert_array_equal(got["mask"], state["mask"])
+        np.testing.assert_array_equal(got["gray"], state["gray"])
 
 
 class TestCheckpointer:

@@ -1,0 +1,142 @@
+"""core.sa correctness on analytic ground truth (paper §II-A methods).
+
+VBD (Saltelli/Jansen) against the Ishigami function and a linear additive
+model — both with closed-form Sobol indices — inside tolerance bands that
+account for Monte-Carlo error and grid quantisation; MOAT μ* ranking on a
+monotone function with known coefficient ordering; and fixed-seed
+determinism of the samplers (the adaptive driver's resume/oracle machinery
+relies on it).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.params import ParamSpace, morris_trajectories
+from repro.core.sa import moat_indices, saltelli_sample, vbd_indices
+
+
+def uniform_grid_space(names, lo, hi, levels):
+    """Equal-probability grids whose cell midpoints tile [lo, hi]."""
+    vals = [lo + (hi - lo) * (i + 0.5) / levels for i in range(levels)]
+    return ParamSpace.from_dict({n: vals for n in names})
+
+
+def evaluate(space, param_sets, fn):
+    names = space.names
+    return [fn(**{n: dict(ps)[n] for n in names}) for ps in param_sets]
+
+
+class TestVbdGroundTruth:
+    def test_ishigami(self):
+        """Ishigami (a=7, b=0.1): the canonical nonlinear/ non-monotone SA
+        benchmark with closed-form indices."""
+        a, b = 7.0, 0.1
+        space = uniform_grid_space(["x1", "x2", "x3"], -np.pi, np.pi, 128)
+        sets, n_base = saltelli_sample(space, 4096, seed=7)
+        y = evaluate(
+            space, sets,
+            lambda x1, x2, x3: np.sin(x1) + a * np.sin(x2) ** 2 + b * x3**4 * np.sin(x1),
+        )
+        res = vbd_indices(space, y, n_base)
+
+        V = a**2 / 8 + b * np.pi**4 / 5 + b**2 * np.pi**8 / 18 + 0.5
+        S1 = (b * np.pi**4 / 5 + b**2 * np.pi**8 / 50 + 0.5) / V
+        S2 = (a**2 / 8) / V
+        ST1 = S1 + (b**2 * np.pi**8 * (1 / 18 - 1 / 50)) / V
+        ST3 = ST1 - S1
+        want_first = {"x1": S1, "x2": S2, "x3": 0.0}
+        want_total = {"x1": ST1, "x2": S2, "x3": ST3}
+        for name in space.names:
+            assert res.first_order[name] == pytest.approx(want_first[name], abs=0.06)
+            assert res.total[name] == pytest.approx(want_total[name], abs=0.06)
+
+    def test_linear_model(self):
+        """Additive model y = Σ c_i x_i: S_i = S_Ti = c_i² / Σ c_j²."""
+        c = {"a": 4.0, "b": 2.0, "cc": 1.0}
+        space = uniform_grid_space(list(c), 0.0, 1.0, 64)
+        sets, n_base = saltelli_sample(space, 8192, seed=0)
+        y = evaluate(space, sets, lambda a, b, cc: c["a"] * a + c["b"] * b + c["cc"] * cc)
+        res = vbd_indices(space, y, n_base)
+        denom = sum(v**2 for v in c.values())
+        for name, coef in c.items():
+            want = coef**2 / denom
+            assert res.first_order[name] == pytest.approx(want, abs=0.05)
+            assert res.total[name] == pytest.approx(want, abs=0.05)
+
+    def test_bootstrap_ci_brackets_estimate(self):
+        space = uniform_grid_space(["a", "b"], 0.0, 1.0, 32)
+        sets, n_base = saltelli_sample(space, 1024, seed=1)
+        y = evaluate(space, sets, lambda a, b: 3.0 * a + b)
+        plain = vbd_indices(space, y, n_base)
+        assert plain.total_ci is None and plain.first_order_ci is None
+        boot = vbd_indices(space, y, n_base, n_boot=200, seed=5)
+        for name in space.names:
+            for point, ci in ((boot.total, boot.total_ci), (boot.first_order, boot.first_order_ci)):
+                lo, hi = ci[name]
+                assert lo <= point[name] <= hi
+            lo, hi = boot.total_ci[name]
+            assert hi - lo < 0.2  # noiseless additive model: tight S_Ti
+
+
+class TestMoatGroundTruth:
+    def test_monotone_ranking(self):
+        """On y = 10a + 3b + 0.1c, μ* must rank a > b > c (each elementary
+        effect is exactly coef × the step taken)."""
+        space = uniform_grid_space(["a", "b", "cc"], 0.0, 1.0, 16)
+        sets, moves = morris_trajectories(space, 8, seed=2)
+        y = evaluate(space, sets, lambda a, b, cc: 10.0 * a + 3.0 * b + 0.1 * cc)
+        res = moat_indices(space, y, moves)
+        assert res.ranking() == ["a", "b", "cc"]
+        assert res.mu_star["a"] > res.mu_star["b"] > res.mu_star["cc"] > 0
+
+    def test_inert_parameter_zero_mu_star(self):
+        space = uniform_grid_space(["live", "dead"], 0.0, 1.0, 8)
+        sets, moves = morris_trajectories(space, 6, seed=0)
+        y = evaluate(space, sets, lambda live, dead: live**2)
+        res = moat_indices(space, y, moves)
+        assert res.mu_star["dead"] == 0.0
+        assert res.mu_star["live"] > 0.0
+
+    def test_bootstrap_ci_brackets_estimate(self):
+        space = uniform_grid_space(["a", "b"], 0.0, 1.0, 8)
+        sets, moves = morris_trajectories(space, 8, seed=4)
+        y = evaluate(space, sets, lambda a, b: 2.0 * a + b)
+        res = moat_indices(space, y, moves, n_boot=200, seed=1)
+        for name in space.names:
+            lo, hi = res.mu_star_ci[name]
+            assert lo <= res.mu_star[name] <= hi
+
+
+class TestSamplerDeterminism:
+    def test_saltelli_fixed_seed(self):
+        space = uniform_grid_space(["a", "b", "cc"], 0.0, 1.0, 16)
+        s1, n1 = saltelli_sample(space, 64, seed=9)
+        s2, n2 = saltelli_sample(space, 64, seed=9)
+        assert s1 == s2 and n1 == n2
+        s3, _ = saltelli_sample(space, 64, seed=10)
+        assert s3 != s1
+
+    def test_morris_fixed_seed(self):
+        space = uniform_grid_space(["a", "b", "cc"], 0.0, 1.0, 16)
+        r1 = morris_trajectories(space, 4, seed=9)
+        r2 = morris_trajectories(space, 4, seed=9)
+        assert r1 == r2
+        r3 = morris_trajectories(space, 4, seed=11)
+        assert r3 != r1
+
+    def test_saltelli_block_structure(self):
+        """Run order is [A, B, A_B^(0), ..., A_B^(d-1)]: block i agrees with
+        A except (possibly) at parameter i, where it carries B's value."""
+        space = uniform_grid_space(["a", "b"], 0.0, 1.0, 32)
+        sets, n = saltelli_sample(space, 16, seed=0)
+        d = space.dim
+        assert len(sets) == n * (d + 2)
+        A, B = sets[:n], sets[n : 2 * n]
+        for i, name in enumerate(space.names):
+            block = sets[(2 + i) * n : (3 + i) * n]
+            for j in range(n):
+                da, db, dab = dict(A[j]), dict(B[j]), dict(block[j])
+                assert dab[name] == db[name]
+                for other in space.names:
+                    if other != name:
+                        assert dab[other] == da[other]
