@@ -1,0 +1,117 @@
+"""Fleet-of-K StudyDrivers pooling one SharedStore vs single-process and
+vs K independent studies (DESIGN.md §12) — ``BENCH_fleet.json``.
+
+The cross-process payoff the related work leans on (1811.11653 §V runs SA
+executors over a shared reuse pool at 256 nodes): one adaptive study's
+per-round run-list sharded across K worker *processes*, all mounting the
+same crash-safe SharedStore directory, with round N+1 planned against the
+union of every process's committed keys.
+
+Reported / asserted:
+
+* **fleet == single, bit-identically** — objectives, SA indices and
+  decisions per round are equal (tasks are pure; sharding is invisible);
+* **fleet < K independent** — combined tasks executed across the fleet are
+  strictly fewer than K processes each running the study alone (the pooled
+  store turns K−1 of every shared prefix into rehydrations);
+* **zero corrupt reads** — the atomic-write + verify + quarantine protocol
+  under real multi-process traffic.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.app.pipeline import pathology_fleet_build
+from repro.core.metrics import reuse_factor
+from repro.study import StudyDriver, run_fleet_study
+
+from benchmarks.common import SMOKE
+
+N_PROCS = 2
+
+SPACE_DICT = {
+    "B": [210, 220, 230], "G": [210, 220, 230], "R": [210, 220, 230],
+    "T1": [2.5, 5.0, 7.5], "T2": [2.5, 5.0, 7.5],
+    "G1": [20, 40, 60], "G2": [10, 20, 30],
+    "minS": [2, 10, 20], "maxS": [900, 1200, 1500],
+    "minSPL": [5, 20, 40], "minSS": [2, 10, 20], "maxSS": [900, 1200, 1500],
+    "FH": [4, 8], "RC": [4, 8], "WConn": [4, 8],
+}
+
+
+def run(csv: List[str]) -> None:
+    import tempfile
+
+    size = 24 if SMOKE else 48
+    max_rounds = 2 if SMOKE else 3
+    seed = 11
+    build_kwargs = {
+        "size": size,
+        "n_tiles": 1,
+        "seed": seed,
+        "space_dict": SPACE_DICT,
+    }
+
+    # ---------------- single-process reference ---------------------------
+    spec = pathology_fleet_build(**build_kwargs)
+    t0 = time.perf_counter()
+    driver = StudyDriver(
+        spec["workflow"], spec["space"], spec["inputs"],
+        objective=spec["objective"], seed=seed, n_boot=8,
+        input_keys=spec.get("input_keys"),
+    )
+    try:
+        single = driver.run(max_rounds=max_rounds)
+    finally:
+        driver.close()
+    t_single = time.perf_counter() - t0
+    single_tasks = single.tasks_executed
+
+    # ---------------- fleet of N_PROCS over one SharedStore --------------
+    t0 = time.perf_counter()
+    fleet_state, fleet = run_fleet_study(
+        pathology_fleet_build,
+        build_kwargs,
+        n_procs=N_PROCS,
+        store_dir=tempfile.mkdtemp(prefix="rtf_fleet_bench_"),
+        max_rounds=max_rounds,
+        seed=seed,
+        n_boot=8,
+    )
+    t_fleet = time.perf_counter() - t0
+    fleet_tasks = fleet["tasks_executed"]
+
+    # bit-identical science: objectives, indices, decisions per round
+    assert fleet_state.evaluated == single.evaluated, (
+        "fleet sharding changed an objective value"
+    )
+    assert len(fleet_state.rounds) == len(single.rounds)
+    for fr, sr in zip(fleet_state.rounds, single.rounds):
+        assert fr.outputs == sr.outputs, f"round {fr.index} outputs differ"
+        assert fr.analysis == sr.analysis, f"round {fr.index} indices differ"
+    # crash-safety under real multi-process traffic
+    assert fleet["corrupt"] == 0, f"corrupt store reads: {fleet['corrupt']}"
+    # strictly fewer combined tasks than N_PROCS independent studies
+    independent_tasks = N_PROCS * single_tasks
+    assert fleet_tasks < independent_tasks, (
+        f"fleet ({fleet_tasks}) must beat {N_PROCS} independent studies "
+        f"({independent_tasks})"
+    )
+
+    rf = reuse_factor(fleet_tasks, fleet_state.tasks_requested)
+    csv.append(
+        f"fleet_study_{N_PROCS}proc,{t_fleet*1e6:.0f},"
+        f"rounds={len(fleet_state.rounds)}_tasks={fleet_tasks}"
+        f"_reuse_factor={rf:.2f}x"
+        f"_rehydrations={fleet['store_disk_hits']}"
+        f"_dedup_writes={fleet['dedup_writes']}"
+        f"_corrupt={fleet['corrupt']}"
+    )
+    csv.append(
+        f"fleet_single_reference,{t_single*1e6:.0f},"
+        f"tasks={single_tasks}"
+        f"_independent_x{N_PROCS}={independent_tasks}"
+        f"_fleet_saves={independent_tasks - fleet_tasks}tasks"
+    )

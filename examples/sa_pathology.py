@@ -21,6 +21,12 @@ Usage (README-level):
     # only its delta against the cached trie:
     PYTHONPATH=src python examples/sa_pathology.py --adaptive [--rounds 4]
 
+    # Fleet mode (DESIGN.md §12): the same adaptive study sharded across K
+    # StudyDriver *processes* pooling one crash-safe SharedStore directory
+    # (atomic writes + per-key file locks + manifest); round N+1 plans
+    # against the union of every process's committed keys:
+    PYTHONPATH=src python examples/sa_pathology.py --fleet 2 [--rounds 4]
+
     # Library form — dataset-level study in three lines:
     from repro.engine import ClusterSpec, execute_study, plan_study
     plan = plan_study(workflow, param_sets, policy="hybrid")
@@ -85,6 +91,44 @@ def run_adaptive(args) -> None:
     print(f"surviving parameters: {out['active']}")
 
 
+def run_fleet(args) -> None:
+    """Fleet mode: shard the adaptive study across N processes pooling one
+    crash-safe SharedStore directory."""
+    import tempfile
+
+    from repro.app.pipeline import run_fleet_study
+
+    store_dir = args.store_dir or tempfile.mkdtemp(prefix="rtf_fleet_")
+    out = run_fleet_study(
+        n_procs=args.fleet,
+        store_dir=store_dir,
+        size=args.size,
+        n_tiles=args.tiles,
+        space=SPACE,
+        max_rounds=args.rounds,
+        n_workers=args.workers,
+        seed=3,
+    )
+    fleet = out["fleet"]
+    print(
+        f"fleet study ({fleet['n_procs']} procs over {store_dir}): "
+        f"{out['rounds']} rounds, "
+        f"{out['tasks_executed']}/{out['tasks_requested']} combined tasks "
+        f"(reuse factor {out['reuse_factor']:.2f}x), "
+        f"{fleet['committed_keys']} committed store keys, "
+        f"{fleet['store_disk_hits']} cross-process rehydrations, "
+        f"{fleet['dedup_writes']} lock-elided double-writes, "
+        f"{fleet['corrupt']} corrupt reads, {out['wall_seconds']:.1f}s"
+    )
+    for r in out["rounds_detail"]:
+        print(
+            f"  [{r['kind']:6s}] {r['n_new']}/{r['n_proposed']} new runs, "
+            f"{r['tasks_executed']} tasks executed — "
+            f"{r['decision'].get('reason', '')}"
+        )
+    print(f"surviving parameters: {out['active']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--runs", type=int, default=48)
@@ -94,8 +138,16 @@ def main() -> None:
     ap.add_argument("--adaptive", action="store_true",
                     help="multi-round adaptive study (MOAT -> prune -> VBD -> refine)")
     ap.add_argument("--rounds", type=int, default=4, help="adaptive round budget")
+    ap.add_argument("--fleet", type=int, default=0, metavar="K",
+                    help="shard the adaptive study across K processes "
+                         "pooling one SharedStore")
+    ap.add_argument("--store-dir", default=None,
+                    help="SharedStore directory for --fleet (default: fresh tmpdir)")
     args = ap.parse_args()
 
+    if args.fleet > 0:
+        run_fleet(args)
+        return
     if args.adaptive:
         run_adaptive(args)
         return

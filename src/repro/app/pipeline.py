@@ -41,6 +41,7 @@ __all__ = [
     "run_study",
     "run_dataset_study",
     "run_adaptive_study",
+    "run_fleet_study",
 ]
 
 # --------------------------------------------------------------------------
@@ -188,6 +189,22 @@ def build_workflow(h: int, w: int, costs: Optional[Dict[str, float]] = None) -> 
 # --------------------------------------------------------------------------
 # SA study drivers: thin callers of the StudyPlanner engine.
 # --------------------------------------------------------------------------
+
+
+def _round_detail(r: Any) -> Dict[str, Any]:
+    """One round's reporting dict, shared by the adaptive and fleet study
+    summaries so the two never drift."""
+    return {
+        "kind": r.kind,
+        "n_proposed": r.n_proposed,
+        "n_new": r.n_new,
+        "planned_tasks": r.planned_tasks,
+        "planned_known": r.planned_known,
+        "tasks_executed": r.tasks_executed,
+        "cache_hits": r.cache_hits,
+        "analysis": r.analysis,
+        "decision": r.decision,
+    }
 
 
 def _plan_image_study(
@@ -437,20 +454,124 @@ def run_adaptive_study(
     return {
         **summary,
         "wall_seconds": time.perf_counter() - t0,
-        "rounds_detail": [
-            {
-                "kind": r.kind,
-                "n_proposed": r.n_proposed,
-                "n_new": r.n_new,
-                "planned_tasks": r.planned_tasks,
-                "planned_known": r.planned_known,
-                "tasks_executed": r.tasks_executed,
-                "cache_hits": r.cache_hits,
-                "analysis": r.analysis,
-                "decision": r.decision,
-            }
-            for r in state.rounds
-        ],
+        "rounds_detail": [_round_detail(r) for r in state.rounds],
         "reference_masks": [np.asarray(m) for m in ref_masks],
+        "state": state,
+    }
+
+
+def _leader_objective(leaf_state: Any, input_index: int) -> float:
+    raise RuntimeError(
+        "the fleet leader never evaluates; its objective is a placeholder"
+    )
+
+
+def pathology_fleet_build(
+    size: int = 48,
+    n_tiles: int = 2,
+    seed: int = 0,
+    space_dict: Optional[Dict[str, list]] = None,
+    costs: Optional[Dict[str, float]] = None,
+    leader: bool = False,
+) -> Dict[str, Any]:
+    """Spawn-picklable fleet ``build`` for the pathology workflow
+    (:func:`repro.study.run_fleet_study`): each fleet process calls this
+    once to construct its own workflow, tiles, reference masks and Dice
+    objective — everything process-local and deterministic, so every
+    process computes identical references (tasks are pure and tiles are
+    seeded). With ``leader=True`` (the fleet runner passes it for the
+    leader, which proposes/analyzes but never evaluates) the expensive
+    reference segmentation is skipped and the objective is a placeholder
+    that raises if ever called."""
+    from repro.core.params import ParamSpace as _ParamSpace
+
+    space = (
+        TABLE1_SPACE if space_dict is None else _ParamSpace.from_dict(space_dict)
+    )
+    wf = build_workflow(size, size, costs)
+    tiles = [synthetic_tile(size, size, seed=seed + t) for t in range(n_tiles)]
+    raws = [{"raw": jnp.asarray(im)} for im in tiles]
+    if leader:
+        objective: Any = _leader_objective
+    else:
+        ref_plan = plan_study(
+            wf, [space.default()], policy="rmsr", active_paths=1
+        )
+        ref_stream = execute_study(ref_plan, raws)
+        ref_masks = [ref_stream.outputs[i][0]["mask"] for i in range(len(raws))]
+
+        def objective(leaf_state: Any, input_index: int) -> float:
+            return 1.0 - float(dice(leaf_state["mask"], ref_masks[input_index]))
+
+    return {
+        "workflow": wf,
+        "space": space,
+        "inputs": raws,
+        "objective": objective,
+        "input_keys": [f"tile{i}" for i in range(n_tiles)],
+    }
+
+
+def run_fleet_study(
+    *,
+    n_procs: int = 2,
+    store_dir: str,
+    size: int = 48,
+    n_tiles: int = 2,
+    space: ParamSpace = TABLE1_SPACE,
+    max_rounds: int = 4,
+    strategy: str = "hybrid",
+    n_workers: int = 1,
+    seed: int = 0,
+    n_boot: int = 16,
+    sa_policy: Optional[Any] = None,
+    samplers: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Adaptive pathology study executed by a fleet of ``n_procs``
+    StudyDriver processes pooling one :class:`~repro.runtime.SharedStore`
+    on ``store_dir`` (DESIGN.md §12).
+
+    Thin caller of :func:`repro.study.run_fleet_study` with the pathology
+    ``build``; the returned summary mirrors :func:`run_adaptive_study` plus
+    the fleet's cross-process accounting (``fleet`` key: combined task
+    counts, corrupt-entry reads — must be 0 — lock-elided double-writes and
+    cross-process store rehydrations)."""
+    from repro.study import run_fleet_study as _run_fleet
+
+    t0 = time.perf_counter()
+    state, fleet = _run_fleet(
+        pathology_fleet_build,
+        {
+            "size": size,
+            "n_tiles": n_tiles,
+            "seed": seed,
+            "space_dict": {p.name: list(p.values) for p in space.params},
+        },
+        n_procs=n_procs,
+        store_dir=store_dir,
+        max_rounds=max_rounds,
+        seed=seed,
+        engine_policy=strategy,
+        cluster=ClusterSpec(n_workers=n_workers),
+        sa_policy=sa_policy,
+        samplers=samplers,
+        n_boot=n_boot,
+    )
+    from repro.core.metrics import reuse_factor as _rf
+
+    return {
+        "rounds": len(state.rounds),
+        "tasks_requested": state.tasks_requested,
+        "tasks_executed": state.tasks_executed,
+        "reuse_factor": _rf(state.tasks_executed, state.tasks_requested),
+        "active": list(state.active),
+        "frozen": dict(state.frozen),
+        "phase": state.phase,
+        "best": None
+        if state.best is None
+        else {"params": dict(state.best[0]), "objective": state.best[1]},
+        "fleet": fleet,
+        "wall_seconds": time.perf_counter() - t0,
+        "rounds_detail": [_round_detail(r) for r in state.rounds],
         "state": state,
     }

@@ -103,23 +103,9 @@ class ResultCache:
             self.misses += 1
         return False, None
 
-    def _spill_locked(self, key: Tuple, value: Any) -> None:
-        if self.spill_store is not None:
-            self.spills += 1
-            self.spill_store.put(self._store_key(key), value)
-
-    def _admit_locked(self, key: Tuple, value: Any, nbytes: int) -> None:
-        if nbytes > self.max_bytes:
-            return
-        self._entries[key] = (value, nbytes)
-        self._bytes += nbytes
-        while self._bytes > self.max_bytes and self._entries:
-            k, (v, b) = self._entries.popitem(last=False)
-            self._bytes -= b
-            self._spill_locked(k, v)
-
     def put(self, key: Tuple, value: Any, nbytes: int) -> None:
         nbytes = max(0, int(nbytes))
+        spilled = []
         with self._lock:
             if key in self._entries:
                 self._entries.move_to_end(key)
@@ -127,22 +113,41 @@ class ResultCache:
             if nbytes > self.max_bytes:
                 # never admitted to RAM, but too valuable to drop when a
                 # spill tier exists (it may be a whole merged prefix)
-                self._spill_locked(key, value)
-                return
-            self._admit_locked(key, value, nbytes)
+                if self.spill_store is not None:
+                    self.spills += 1
+                    spilled.append((key, value))
+            else:
+                self._entries[key] = (value, nbytes)
+                self._bytes += nbytes
+                while self._bytes > self.max_bytes and self._entries:
+                    k, (v, b) = self._entries.popitem(last=False)
+                    self._bytes -= b
+                    if self.spill_store is not None:
+                        self.spills += 1
+                        spilled.append((k, v))
+        # Spill I/O runs OUTSIDE the cache lock, mirroring get(): with a
+        # SharedStore a spill can be a file-locked disk write, and holding
+        # the cache-wide lock across it would serialize every worker. A
+        # concurrent get() of a just-evicted, not-yet-spilled key reads as
+        # a miss and recomputes — tasks are pure, so that is only wasted
+        # work, never a wrong value.
+        for k, v in spilled:
+            self.spill_store.put(self._store_key(k), v)
 
     def flush(self) -> None:
         """Write every live entry through to the spill store's **disk**
-        tier (durability barrier before persisting a StudyState): the
-        cache's RAM entries are pushed into the store, then the store's own
-        RAM tier — which also holds previously-evicted entries that never
-        reached disk — is persisted wholesale. No-op without a spill store;
-        entries stay admitted."""
+        tier (durability barrier before persisting a StudyState, and the
+        fleet workers' publish point — peers resolve the flushed keys on
+        their next store consultation): the cache's RAM entries are pushed
+        into the store, then the store's own RAM tier — which also holds
+        previously-evicted entries that never reached disk — is persisted
+        wholesale. No-op without a spill store; entries stay admitted."""
         if self.spill_store is None:
             return
         with self._lock:
-            for key, (value, _) in self._entries.items():
-                self.spill_store.put(self._store_key(key), value)
+            snapshot = [(key, value) for key, (value, _) in self._entries.items()]
+        for key, value in snapshot:
+            self.spill_store.put(self._store_key(key), value)
         self.spill_store.persist_all()
 
 

@@ -80,6 +80,12 @@ class TrieLedger:
     def add_all(self, keys: Iterable[Tuple]) -> None:
         self._seen.update(repr(k) for k in keys)
 
+    def merge(self, entries: Iterable[str]) -> None:
+        """Union already-serialised entries (``to_list`` output from another
+        process's ledger) into this one — the fleet-merge path: round N+1
+        plans against the union of every process's committed keys."""
+        self._seen.update(entries)
+
     def to_list(self) -> List[str]:
         return sorted(self._seen)
 

@@ -9,4 +9,4 @@ from repro.runtime.simulator import (  # noqa: F401
     simulate_cluster,
     simulate_stream,
 )
-from repro.runtime.storage import HierarchicalStore  # noqa: F401
+from repro.runtime.storage import HierarchicalStore, SharedStore  # noqa: F401

@@ -80,6 +80,11 @@ class Manager:
         self._attempt_seq: Dict[str, int] = {}  # highest attempt # issued per key
         self._callbacks: Dict[str, Callable[[str, Any], None]] = {}
         self._pending: set = set()  # keys submitted, no result yet
+        # Keys forgotten while still holding a lease: their bookkeeping is
+        # kept for first-completion-wins dedup and released when the last
+        # lease settles (drained in _settle), so a long-lived fleet session
+        # stays bounded even when forget() races in-flight attempts.
+        self._deferred_forget: set = set()
         # Recent-window of winning-attempt durations for the straggler /
         # heartbeat heuristics: bounded so a session spanning thousands of
         # inputs never grows the median computation, with the sorted median
@@ -188,7 +193,9 @@ class Manager:
         their memoised result they would re-execute — and a key whose
         losing attempt (straggler backup / presumed-dead original) still
         holds a lease keeps its result, so the late completion dedups via
-        first-completion-wins instead of resurrecting a value."""
+        first-completion-wins instead of resurrecting a value. Such keys
+        join the deferred-forget set and are released when their last lease
+        settles — previously they leaked for the session's lifetime."""
         with self._cond:
             keyset = set(keys)
             if not keyset:
@@ -197,10 +204,25 @@ class Manager:
                 it for it in self._queue if it.key not in keyset
             )
             leased = {it.key for it in self._running.values()}
+            self._deferred_forget |= keyset & leased
             for k in keyset - leased:
                 self._results.pop(k, None)
                 self._attempt_seq.pop(k, None)
                 self._callbacks.pop(k, None)
+
+    def _drain_deferred_locked(self, key: str) -> None:
+        """Release a deferred-forgotten key's bookkeeping once its LAST
+        lease has been returned (caller holds the lock and has already
+        popped its own lease). While any other attempt is still in flight
+        the memoised result must survive so the late completion dedups."""
+        if key not in self._deferred_forget:
+            return
+        if any(it.key == key for it in self._running.values()):
+            return
+        self._deferred_forget.discard(key)
+        self._results.pop(key, None)
+        self._attempt_seq.pop(key, None)
+        self._callbacks.pop(key, None)
 
     # ------------------------------------------------------------------
     # Worker protocol
@@ -303,6 +325,7 @@ class Manager:
                 if item.started_at is not None and not isinstance(value, Exception):
                     self._record_duration_locked(time.monotonic() - item.started_at)
                 cb = self._callbacks.pop(item.key, None)
+            self._drain_deferred_locked(item.key)
             self._cond.notify_all()
         if not won:  # raced duplicate: the winner owns callback + pending
             return
@@ -342,6 +365,7 @@ class Manager:
             if item.key in self._results:
                 with self._lock:  # bucket completed after we leased: release
                     self._running.pop(f"{item.key}#{item.attempts}", None)
+                    self._drain_deferred_locked(item.key)
                 continue
             try:
                 value = item.fn()

@@ -10,6 +10,22 @@ directory by a *different process* resolves the same keys to the same files
 This is what lets a resumed SA study (``repro.study.StudyState``) rehydrate
 prior-round results instead of recomputing them.
 
+Crash safety (DESIGN.md §12): every disk write goes to a ``.tmp`` sibling,
+is fsynced, and lands via ``os.replace`` — a killed writer can leave only
+an orphaned ``.tmp``, never a truncated entry under the final name. Each
+entry additionally carries a fixed-size footer (magic + payload length +
+sha256) verified on load; an entry failing verification — however it got
+there — is *quarantined* (moved aside), counted on the ``corrupt`` counter
+and reported as a miss, so a poisoned directory self-heals by recomputing.
+
+:class:`SharedStore` layers cross-process coordination on top: a per-key
+advisory file lock (``fcntl.flock``) so N writers over one directory never
+double-write an entry, and an append-only last-writer-wins manifest
+(``manifest.jsonl``) recording every committed key for audit/accounting —
+the fleet runner (``repro.study.run_fleet_study``) mounts one SharedStore
+per process; each round's delta plans against the union of every worker's
+TrieLedger entries, and the store serves the corresponding outputs.
+
 The RMSR schedule exists precisely to keep the working set inside the RAM
 tier — the paper notes that spilling every task output of a fine-grain stage
 costs more than recomputing (§III), which is why memory-bounded scheduling
@@ -21,15 +37,34 @@ stages.
 from __future__ import annotations
 
 import collections
+import contextlib
 import hashlib
+import io
+import json
+import os
 import pathlib
+import struct
 import tempfile
 import threading
-from typing import Any, Dict, Optional
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Set, Tuple
 
 import numpy as np
 
-__all__ = ["HierarchicalStore", "stable_key"]
+try:  # advisory file locks are POSIX-only; SharedStore degrades gracefully
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX
+    fcntl = None  # type: ignore[assignment]
+
+__all__ = ["HierarchicalStore", "SharedStore", "stable_key"]
+
+# Entry footer: | payload bytes | magic (8) | payload length (8, LE) |
+# sha256(payload) (32) |. The payload is a complete npz archive; loads slice
+# it back out, so nothing ever parses the footer as zip data.
+_FOOTER_MAGIC = b"RTFSTRv1"
+_FOOTER_SIZE = len(_FOOTER_MAGIC) + 8 + 32
+
+_QUARANTINE_DIR = "quarantine"
 
 
 def stable_key(key: Any) -> str:
@@ -42,11 +77,74 @@ def stable_key(key: Any) -> str:
     return hashlib.sha256(repr(key).encode()).hexdigest()
 
 
+def _serialise(v: Any) -> bytes:
+    buf = io.BytesIO()
+    if isinstance(v, dict):
+        np.savez(buf, **{kk: np.asarray(vv) for kk, vv in v.items()})
+    else:
+        np.savez(buf, __value__=np.asarray(v))
+    return buf.getvalue()
+
+
+def _pack_entry(payload: bytes) -> bytes:
+    return (
+        payload
+        + _FOOTER_MAGIC
+        + struct.pack("<Q", len(payload))
+        + hashlib.sha256(payload).digest()
+    )
+
+
+def _has_footer_magic(data: bytes) -> bool:
+    return (
+        len(data) >= _FOOTER_SIZE
+        and data[-_FOOTER_SIZE:][:8] == _FOOTER_MAGIC
+    )
+
+
+def _probe_footer(path: pathlib.Path) -> str:
+    """Classify an on-disk entry by its footer WITHOUT reading the payload
+    (the shared primitive under both the read-side ``contains`` probe and
+    the write-side commit probe): ``"missing"`` (unreadable/absent),
+    ``"short"`` (smaller than a footer — no real npz is), ``"legacy"``
+    (no magic: a pre-footer entry, np.load is its verifier), ``"bad-length"``
+    (magic present, recorded length disagrees with file size: torn), or
+    ``"ok"`` (footer structurally valid; the digest is checked on load)."""
+    try:
+        size = path.stat().st_size
+        if size < _FOOTER_SIZE:
+            return "short"
+        with open(path, "rb") as f:
+            f.seek(size - _FOOTER_SIZE)
+            footer = f.read(_FOOTER_SIZE)
+    except OSError:
+        return "missing"
+    if footer[:8] != _FOOTER_MAGIC:
+        return "legacy"
+    (length,) = struct.unpack("<Q", footer[8:16])
+    return "ok" if length + _FOOTER_SIZE == size else "bad-length"
+
+
+def _footer_ok(data: bytes) -> Optional[bytes]:
+    """Return the verified payload of a footered entry, or None if ``data``
+    is not a well-formed (length- and digest-checked) entry."""
+    if not _has_footer_magic(data):
+        return None
+    payload, footer = data[:-_FOOTER_SIZE], data[-_FOOTER_SIZE:]
+    (length,) = struct.unpack("<Q", footer[8:16])
+    if length != len(payload):
+        return None
+    if hashlib.sha256(payload).digest() != footer[16:]:
+        return None
+    return payload
+
+
 class HierarchicalStore:
     """RAM tier (LRU, byte-bounded) over a content-addressed npz disk tier.
 
     ``hits`` counts RAM-tier hits, ``disk_hits`` disk-tier rehydrations,
-    ``misses`` keys found in neither tier, ``spills`` RAM→disk evictions.
+    ``misses`` keys found in neither tier, ``spills`` RAM→disk evictions,
+    ``corrupt`` disk entries that failed verification and were quarantined.
     """
 
     def __init__(self, ram_bytes: int = 1 << 30, disk_dir: Optional[str] = None):
@@ -61,6 +159,11 @@ class HierarchicalStore:
         self.hits = 0
         self.disk_hits = 0
         self.misses = 0
+        self.corrupt = 0
+        # Test/fault-injection hook: called with the tmp path after the tmp
+        # file is written+fsynced but BEFORE os.replace publishes it — the
+        # window a mid-write kill lands in. Raising here models the kill.
+        self.fault_after_tmp_write: Optional[Callable[[pathlib.Path], None]] = None
 
     @property
     def disk_dir(self) -> str:
@@ -83,45 +186,189 @@ class HierarchicalStore:
                 self._used -= self._sizes.pop(key)
                 del self._ram[key]
             size = self._nbytes(obj)
-            self._evict_for(size)
+            evicted = self._evict_for(size)
             self._ram[key] = obj
             self._ram.move_to_end(key)
             self._sizes[key] = size
             self._used += size
+        self._write_evicted(evicted)
+
+    def _write_evicted(self, evicted) -> None:
+        """Write spilled entries OUTSIDE the store lock (disk writes are
+        fsync-heavy and, for SharedStore, flocked — holding the store-wide
+        lock across them would serialize every reader). In the window
+        between eviction and landing, a concurrent get() of an evicted key
+        reads as a miss and recomputes — tasks are pure, so that is only
+        wasted work, never a wrong value."""
+        for k, v in evicted:
+            self._write_disk(k, v)
+
+    # ------------------------------------------------------------------
+    # Crash-safe disk writes: tmp sibling + fsync + atomic rename
+    # ------------------------------------------------------------------
+    def _atomic_write(self, path: pathlib.Path, blob: bytes) -> None:
+        """Publish ``blob`` under ``path`` atomically: a reader either sees
+        the complete previous entry or the complete new one, never a
+        truncation — a killed writer leaves only an orphaned ``.tmp``."""
+        # pid+tid-unique: disk writes run outside the store lock, so two
+        # threads may write the same key concurrently — each needs its own
+        # tmp file or the loser's os.replace finds its tmp renamed away
+        tmp = path.with_name(
+            f"{path.name}.{os.getpid()}.{threading.get_ident()}.tmp"
+        )
+        with open(tmp, "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        if self.fault_after_tmp_write is not None:
+            self.fault_after_tmp_write(tmp)
+        os.replace(tmp, path)
+        self._fsync_dir()
+
+    def _fsync_dir(self) -> None:
+        try:
+            dfd = os.open(self._disk, os.O_RDONLY)
+        except OSError:  # pragma: no cover - platform without dir fds
+            return
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
 
     def _write_disk(self, key: str, v: Any) -> None:
-        path = self._path(key)
-        if isinstance(v, dict):
-            np.savez(path, **{kk: np.asarray(vv) for kk, vv in v.items()})
-        else:
-            np.savez(path, __value__=np.asarray(v))
-        (self._disk / f"{stable_key(key)}.key").write_text(key)
+        self._atomic_write(self._path(key), _pack_entry(_serialise(v)))
+        self._write_key_sidecar(key)
 
-    def _evict_for(self, incoming: int) -> None:
+    def _write_key_sidecar(self, key: str) -> None:
+        """Best-effort ``<sha>.key`` reverse-mapping for humans debugging a
+        store directory; nothing reads it, so it gets a plain write (no
+        tmp/fsync) and only once per key."""
+        sidecar = self._disk / f"{stable_key(key)}.key"
+        try:
+            if not sidecar.exists():
+                sidecar.write_text(key)
+        except OSError:  # pragma: no cover - diagnostics only
+            pass
+
+    # ------------------------------------------------------------------
+    # Verified disk reads + quarantine
+    # ------------------------------------------------------------------
+    def _maybe_quarantine(self, path: pathlib.Path) -> bool:
+        """Move a failed-verification entry aside (never delete: the bytes
+        are evidence); the key then reads as a miss and the next put
+        republishes a good entry — the self-heal path. Re-verifies first:
+        a peer may have replaced the bad file with a freshly committed good
+        entry between our failed read and now, and quarantining THAT would
+        lose a committed entry. Returns True only if a file was actually
+        moved; callers count ``corrupt`` then. SharedStore overrides this
+        to re-verify under the per-key write lock, closing the race
+        completely."""
+        return self._quarantine_if_still_bad(path)
+
+    def _quarantine_if_still_bad(self, path: pathlib.Path) -> bool:
+        try:
+            data = path.read_bytes()
+        except OSError:
+            return False  # gone (peer quarantined or deleted it)
+        if _footer_ok(data) is not None:
+            return False  # repaired underneath us: keep it
+        qdir = self._disk / _QUARANTINE_DIR
+        try:
+            qdir.mkdir(exist_ok=True)
+            os.replace(path, qdir / f"{path.name}.{time.time_ns()}")
+            return True
+        except OSError:  # racing quarantiners: the loser's replace fails
+            return False
+
+    def _load_disk_unlocked(self, path: pathlib.Path) -> Tuple[str, Any]:
+        """Load + verify one disk entry WITHOUT the store lock (callers
+        update counters under it afterwards). Returns ``("ok", value)``,
+        ``("missing", None)``, or — after quarantining the file —
+        ``("corrupt", None)`` for truncation, bit-rot or zero-byte files.
+
+        An entry carrying the footer magic must pass length+sha; a
+        footer-less file is a **legacy** (pre-footer) entry, for which
+        ``np.load`` itself is the verifier — a torn legacy write fails to
+        parse and is quarantined, a complete one is accepted, so a store
+        directory written before the footer protocol still resumes with
+        zero recomputation. The legacy path never applies to footered
+        entries: a bit-flipped payload could still parse, so a failed
+        digest is final."""
+        for _ in range(3):  # retry when a peer repairs the entry under us
+            try:
+                data = path.read_bytes()
+            except OSError:
+                return "missing", None
+            if _has_footer_magic(data):
+                payload = _footer_ok(data)
+                if payload is None:
+                    if self._maybe_quarantine(path):
+                        return "corrupt", None
+                    continue  # entry changed since our read: re-read
+            else:
+                payload = data  # legacy entry: parse failure == corrupt
+            try:
+                with np.load(io.BytesIO(payload)) as z:
+                    if "__value__" in z:
+                        return "ok", z["__value__"]
+                    return "ok", {k: z[k] for k in z.files}
+            except Exception:  # noqa: BLE001 — parse failure is corruption
+                if self._maybe_quarantine(path):
+                    return "corrupt", None
+                continue
+        return "corrupt", None  # kept changing underneath us: give up
+
+    def _disk_entry_ok(self, path: pathlib.Path) -> bool:
+        """Cheap existence+integrity probe for ``contains`` (caller holds
+        the store lock): footer magic + recorded length vs file size (no
+        digest). Quarantines on failure so ``contains`` never reports a
+        torn entry as present. A footer-less file big enough to be a legacy
+        npz is reported present optimistically — ``get`` fully validates."""
+        status = _probe_footer(path)
+        if status == "ok":
+            return True
+        if status == "legacy":
+            return True  # pre-footer entry: np.load verifies on get
+        if status == "missing":
+            return False
+        # "short" / "bad-length": a torn entry — quarantine and report absent
+        if self._maybe_quarantine(path):
+            self.corrupt += 1
+        return False
+
+    def _evict_for(self, incoming: int):
+        """LRU-evict under the caller-held store lock; returns the evicted
+        ``(key, value)`` pairs for the caller to write to disk AFTER
+        releasing the lock (see ``_write_evicted``)."""
+        evicted = []
         while self._used + incoming > self.ram_bytes and self._ram:
             k, v = self._ram.popitem(last=False)  # LRU
             self._used -= self._sizes.pop(k)
             self.spills += 1
-            self._write_disk(k, v)
+            evicted.append((k, v))
+        return evicted
 
     def persist(self, key: str) -> None:
         """Write a RAM-resident object to the disk tier without evicting it
         (a durability flush, e.g. before a StudyState checkpoint)."""
         with self._lock:
-            if key in self._ram:
-                self._write_disk(key, self._ram[key])
+            value = self._ram.get(key)
+        if value is not None:
+            self._write_disk(key, value)
 
     def persist_all(self) -> None:
         """Write every RAM-resident object to the disk tier (durability
         barrier: after this, a store re-opened on the directory resolves
-        everything this one holds)."""
+        everything this one holds). The writes run outside the store lock —
+        they are fsync-heavy and, for SharedStore, flocked."""
         with self._lock:
-            for k, v in self._ram.items():
-                self._write_disk(k, v)
+            snapshot = list(self._ram.items())
+        for k, v in snapshot:
+            self._write_disk(k, v)
 
     def contains(self, key: str) -> bool:
         with self._lock:
-            return key in self._ram or self._path(key).exists()
+            return key in self._ram or self._disk_entry_ok(self._path(key))
 
     def get(self, key: str) -> Optional[Any]:
         with self._lock:
@@ -129,24 +376,33 @@ class HierarchicalStore:
                 self.hits += 1
                 self._ram.move_to_end(key)
                 return self._ram[key]
-            path = self._path(key)
-            if path.exists():
+        # the disk load (read + digest + np.load) runs OUTSIDE the store
+        # lock — holding it across file I/O would serialize every worker's
+        # store consultation behind one rehydration
+        status, value = self._load_disk_unlocked(self._path(key))
+        with self._lock:
+            if key in self._ram:  # raced: a peer thread promoted it first
+                self.hits += 1
+                self._ram.move_to_end(key)
+                return self._ram[key]
+            if status == "ok":
                 self.disk_hits += 1
-                with np.load(path) as z:
-                    if "__value__" in z:
-                        value: Any = z["__value__"]
-                    else:
-                        value = {k: z[k] for k in z.files}
                 # promote into the (LRU-bounded) RAM tier: a hot spilled
                 # entry must not pay deserialisation on every read
                 size = self._nbytes(value)
-                self._evict_for(size)
+                evicted = self._evict_for(size)
                 self._ram[key] = value
                 self._sizes[key] = size
                 self._used += size
-                return value
-            self.misses += 1
-            return None
+            elif status == "corrupt":
+                self.corrupt += 1
+                self.misses += 1
+            else:
+                self.misses += 1
+        if status == "ok":
+            self._write_evicted(evicted)
+            return value
+        return None
 
     def delete(self, key: str) -> None:
         with self._lock:
@@ -160,3 +416,153 @@ class HierarchicalStore:
     @property
     def used_bytes(self) -> int:
         return self._used
+
+
+class SharedStore(HierarchicalStore):
+    """A :class:`HierarchicalStore` that N processes can safely mount on ONE
+    directory (DESIGN.md §12).
+
+    Readers need no coordination: entries land via atomic rename, so a read
+    sees a complete entry or nothing. Writers coordinate per key:
+
+    * an advisory ``fcntl.flock`` on ``locks/<sha>.lock`` serialises writers
+      of one key, and a writer that finds a valid committed entry under the
+      lock skips its own write (``dedup_writes`` counter) — values are pure
+      functions of the key, so the first committed entry is THE entry;
+    * every commit appends one JSON line to ``manifest.jsonl`` (under the
+      manifest lock, fsynced): ``{key, sha, len, writer, seq, ts}``. Replays
+      are last-writer-wins, so the manifest is idempotent under retries and
+      tolerates a torn final line (a killed appender). ``committed_keys()``
+      folds it into the set of keys the directory serves — an audit /
+      accounting view (the fleet runner reports it; round planning unions
+      TrieLedger entries shipped in worker payloads, a different namespace
+      from store keys). The entry files remain the ground truth: they
+      self-verify on read.
+    """
+
+    def __init__(
+        self,
+        ram_bytes: int = 1 << 30,
+        disk_dir: Optional[str] = None,
+        *,
+        writer_id: Optional[str] = None,
+    ):
+        super().__init__(ram_bytes, disk_dir)
+        self.writer_id = writer_id or f"pid{os.getpid()}"
+        self._locks_dir = self._disk / "locks"
+        self._locks_dir.mkdir(exist_ok=True)
+        self._manifest = self._disk / "manifest.jsonl"
+        self._manifest_lockfile = self._disk / "manifest.lock"
+        self._seq = 0
+        self.dedup_writes = 0  # writes skipped because a PEER committed first
+        # shas this instance has itself committed (or seen committed): the
+        # re-flush fast path — a repeated persist_all skips them without
+        # even taking the flock. Guarded by its own lock because writes now
+        # run outside the store-wide lock.
+        self._persisted: Set[str] = set()
+        self._counters_lock = threading.Lock()
+
+    @contextlib.contextmanager
+    def _flock(self, path: pathlib.Path) -> Iterator[None]:
+        if fcntl is None:  # pragma: no cover - non-POSIX fallback
+            yield
+            return
+        fd = os.open(path, os.O_RDWR | os.O_CREAT, 0o644)
+        try:
+            fcntl.flock(fd, fcntl.LOCK_EX)
+            yield
+        finally:
+            # closing drops the flock; each acquisition opens a fresh fd, so
+            # two threads of one process exclude each other too
+            os.close(fd)
+
+    def _key_lockfile(self, key: str) -> pathlib.Path:
+        return self._locks_dir / f"{stable_key(key)}.lock"
+
+    def _write_disk(self, key: str, v: Any) -> None:
+        sha = stable_key(key)
+        with self._counters_lock:
+            if sha in self._persisted:
+                return  # this instance already committed it; rename is final
+        path = self._path(key)
+        with self._flock(self._key_lockfile(key)):
+            # strict commit probe: only a structurally-valid FOOTERED entry
+            # counts as committed — legacy and torn files fail it and are
+            # overwritten with a fresh footered entry (repair-on-write),
+            # unlike the read path's optimistic legacy handling
+            if _probe_footer(path) == "ok":
+                # a peer committed first; values are pure functions of the
+                # key, so ours is identical — elide the double-write
+                with self._counters_lock:
+                    self.dedup_writes += 1
+                    self._persisted.add(sha)
+                return
+            blob = _pack_entry(_serialise(v))
+            self._atomic_write(path, blob)
+            self._write_key_sidecar(key)
+            self._manifest_append(key, len(blob) - _FOOTER_SIZE)
+        with self._counters_lock:
+            self._persisted.add(sha)
+
+    def _maybe_quarantine(self, path: pathlib.Path) -> bool:
+        """Quarantine under the per-key write lock: with the flock held no
+        peer can be mid-commit, so the re-verify inside
+        ``_quarantine_if_still_bad`` conclusively distinguishes 'still the
+        bad bytes' from 'a peer just repaired it' — a committed entry can
+        never be swept into quarantine."""
+        with self._flock(self._locks_dir / f"{path.stem}.lock"):
+            did = self._quarantine_if_still_bad(path)
+        if did:
+            with self._counters_lock:
+                self._persisted.discard(path.stem)
+        return did
+
+    def delete(self, key: str) -> None:
+        super().delete(key)
+        with self._counters_lock:
+            self._persisted.discard(stable_key(key))
+
+    def _manifest_append(self, key: str, payload_len: int) -> None:
+        self._seq += 1
+        line = (
+            json.dumps(
+                {
+                    "key": key,
+                    "sha": stable_key(key),
+                    "len": payload_len,
+                    "writer": self.writer_id,
+                    "seq": self._seq,
+                    "ts": time.time(),
+                }
+            )
+            + "\n"
+        )
+        with self._flock(self._manifest_lockfile):
+            with open(self._manifest, "a") as f:
+                f.write(line)
+                f.flush()
+                os.fsync(f.fileno())
+
+    def manifest_records(self) -> Dict[str, Dict[str, Any]]:
+        """Fold the manifest into its last-writer-wins view: key → the most
+        recent commit record. Unparseable lines (a torn final append from a
+        killed writer) are skipped — the entry files themselves are the
+        ground truth and self-verify on read."""
+        records: Dict[str, Dict[str, Any]] = {}
+        try:
+            with self._flock(self._manifest_lockfile):
+                text = self._manifest.read_text()
+        except OSError:
+            return records
+        for line in text.splitlines():
+            try:
+                rec = json.loads(line)
+                records[rec["key"]] = rec
+            except (ValueError, KeyError, TypeError):
+                continue
+        return records
+
+    def committed_keys(self) -> Set[str]:
+        """Keys the directory's manifest says are committed — the basis of
+        the fleet's cross-process ledger union."""
+        return set(self.manifest_records())

@@ -9,9 +9,15 @@ cache that survives eviction and process restarts), ``core.sa`` computes
 indices with bootstrap CIs, and a pluggable policy prunes / refines /
 stops. The canonical workflow is MOAT screening → VBD on the survivors →
 grid refinement, plus a coordinate-descent ``tune`` mode.
+
+``run_fleet_study`` scales the same loop across worker *processes*: each
+round's delta is sharded over a spawn pool whose members all mount one
+crash-safe :class:`~repro.runtime.SharedStore` directory, and the leader
+plans round N+1 against the union of every process's committed keys
+(DESIGN.md §12) — bit-identical indices, pooled reuse.
 """
 
-from repro.study.driver import StudyDriver  # noqa: F401
+from repro.study.driver import StudyDriver, run_fleet_study  # noqa: F401
 from repro.study.policies import Decision, ScreenThenRefinePolicy  # noqa: F401
 from repro.study.samplers import (  # noqa: F401
     MoatSampler,

@@ -31,8 +31,9 @@ exactly that against a one-shot oracle.
 
 from __future__ import annotations
 
+import multiprocessing
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.params import ParamSet, ParamSpace, paramset
 from repro.core.sa import moat_indices, vbd_indices
@@ -47,9 +48,9 @@ from repro.study.samplers import (
     SaltelliSampler,
     active_space,
 )
-from repro.study.state import RoundRecord, StudyState
+from repro.study.state import RoundRecord, StudyState, _ps_from_json, _ps_to_json
 
-__all__ = ["StudyDriver"]
+__all__ = ["StudyDriver", "run_fleet_study"]
 
 # objective(final_stage_output, input_index) -> scalar; the driver averages
 # it over inputs to get one y per run.
@@ -86,6 +87,12 @@ class StudyDriver:
         n_boot: int = 32,
         input_keys: Optional[Sequence[Any]] = None,
         store_dir: Optional[str] = None,
+        evaluate_delta: Optional[
+            Callable[
+                [Sequence[ParamSet]],
+                Tuple[Dict[ParamSet, float], Dict[str, int]],
+            ]
+        ] = None,
     ):
         self.workflow = workflow
         self.inputs = list(inputs)
@@ -112,6 +119,11 @@ class StudyDriver:
             "refine": RefinementSampler(),
         }
         self.n_boot = n_boot
+        # Optional out-of-process evaluation hook (the fleet runner): given
+        # the round's delta, returns (ParamSet -> objective, counter stats).
+        # The hook owns planning/execution/state-merge; the driver keeps the
+        # science loop (propose/analyze/decide) and best-point tracking.
+        self._evaluate_delta = evaluate_delta
         self.input_keys = (
             list(input_keys) if input_keys is not None else list(range(len(inputs)))
         )
@@ -167,7 +179,16 @@ class StudyDriver:
             "tasks_executed": 0,
             "cache_hits": 0,
         }
-        if delta:
+        if delta and self._evaluate_delta is not None:
+            y_by_ps, hook_stats = self._evaluate_delta(delta)
+            for ps in delta:
+                y = float(y_by_ps[ps])
+                st.evaluated[ps] = y
+                st.record_best(ps, y, maximize=self.maximize)
+            for k in ("planned_tasks", "planned_known", "tasks_executed",
+                      "cache_hits"):
+                stats[k] = int(hook_stats.get(k, 0))
+        elif delta:
             plan = plan_study(
                 self.workflow,
                 delta,
@@ -373,3 +394,247 @@ class StudyDriver:
 
     def __exit__(self, *exc: Any) -> None:
         self.close()
+
+
+# ---------------------------------------------------------------------------
+# Fleet execution: N StudyDriver processes pooling ONE SharedStore
+# ---------------------------------------------------------------------------
+#
+# ``run_fleet_study`` shards each adaptive round's delta run-list across K
+# worker *processes* (``multiprocessing.get_context("spawn")``), every one
+# mounting the same :class:`~repro.runtime.SharedStore` directory. The
+# leader keeps the science loop — its StudyDriver proposes, analyzes and
+# decides exactly as single-process — and its ``evaluate_delta`` hook farms
+# the execution out; after each round the workers' evaluated objectives and
+# committed ledger keys are unioned back (``StudyState.merge_fleet``), so
+# round N+1 plans against everything ANY process computed. Tasks are pure
+# functions of (input, params): sharding cannot change an objective value,
+# so the fleet's SA indices are bit-identical to the single-process run.
+#
+# ``build`` must be a module-level (spawn-picklable) callable returning a
+# mapping with "workflow", "space", "inputs", "objective" and optionally
+# "input_keys" — each process calls it once to construct its own (process-
+# local, unpicklable) task functions and inputs.
+
+FleetBuild = Callable[..., Mapping[str, Any]]
+
+_FLEET_WORKER: Dict[str, Any] = {}  # per-process singleton driver (spawn init)
+
+
+def _fleet_worker_init(
+    build: FleetBuild,
+    build_kwargs: Optional[Dict[str, Any]],
+    store_dir: str,
+    store_ram_bytes: int,
+    seed: int,
+    engine_policy: str,
+    cluster: Optional[ClusterSpec],
+    cache_bytes: Optional[int],
+) -> None:
+    """Pool initializer (runs once per spawned worker): build the workflow
+    in-process, mount the SharedStore, and keep one StudyDriver — with its
+    persistent Manager session and store-backed cache — alive across every
+    round this worker serves."""
+    from repro.engine.types import DEFAULT_CACHE_BYTES
+    from repro.runtime.storage import SharedStore
+
+    # a raising Pool initializer makes the pool respawn workers forever;
+    # park the failure and surface it on the first shard instead
+    try:
+        spec = build(**(build_kwargs or {}))
+        store = SharedStore(store_ram_bytes, disk_dir=store_dir)
+        state = StudyState(
+            spec["space"],
+            seed=seed,
+            cache_bytes=cache_bytes or DEFAULT_CACHE_BYTES,
+            store=store,
+        )
+        _FLEET_WORKER["driver"] = StudyDriver(
+            spec["workflow"],
+            spec["space"],
+            spec["inputs"],
+            objective=spec["objective"],
+            state=state,
+            seed=seed,
+            engine_policy=engine_policy,
+            cluster=cluster,
+            input_keys=spec.get("input_keys"),
+        )
+    except BaseException as e:  # noqa: BLE001
+        _FLEET_WORKER["init_error"] = e
+
+
+def _fleet_worker_eval(args: Tuple[List[Any], List[str]]) -> Dict[str, Any]:
+    """Evaluate one shard of a round's delta: seed the ledger with the
+    fleet-wide union (so the delta plan knows every process's committed
+    keys), execute through the shared store, then flush the cache to the
+    store's disk tier — the publish point peers rehydrate from."""
+    shard_json, ledger_entries = args
+    if "init_error" in _FLEET_WORKER:
+        raise RuntimeError(
+            "fleet worker failed to initialise"
+        ) from _FLEET_WORKER["init_error"]
+    drv: StudyDriver = _FLEET_WORKER["driver"]
+    st = drv.state
+    st.ledger.merge(ledger_entries)
+    known = set(st.ledger.to_list())
+    shard = [_ps_from_json(ps) for ps in shard_json]
+    # store counters are worker-lifetime; the leader sums per-shard deltas
+    before = (st.store.corrupt, st.store.dedup_writes, st.store.disk_hits)
+    y, stats = drv.evaluate(shard)
+    st.cache.flush()
+    return {
+        "evaluated": [[_ps_to_json(ps), y_i] for ps, y_i in zip(shard, y)],
+        # only the entries THIS shard added: the leader already holds the
+        # union it sent, so shipping the whole ledger back every round
+        # would grow the IPC payload with total study size
+        "ledger": sorted(set(st.ledger.to_list()) - known),
+        "stats": stats,
+        "corrupt": st.store.corrupt - before[0],
+        "dedup_writes": st.store.dedup_writes - before[1],
+        "store_disk_hits": st.store.disk_hits - before[2],
+    }
+
+
+def run_fleet_study(
+    build: FleetBuild,
+    build_kwargs: Optional[Dict[str, Any]] = None,
+    *,
+    n_procs: int = 2,
+    store_dir: str,
+    max_rounds: int = 4,
+    seed: int = 0,
+    engine_policy: str = "hybrid",
+    cluster: Optional[ClusterSpec] = None,
+    sa_policy: Optional[ScreenThenRefinePolicy] = None,
+    samplers: Optional[Dict[str, Any]] = None,
+    n_boot: int = 32,
+    store_ram_bytes: int = 256 << 20,
+    cache_bytes: Optional[int] = None,
+    mp_context: str = "spawn",
+) -> Tuple[StudyState, Dict[str, Any]]:
+    """Run one adaptive study as a fleet of ``n_procs`` StudyDriver worker
+    processes pooling a single :class:`~repro.runtime.SharedStore` on
+    ``store_dir``. Returns ``(leader StudyState, fleet stats)``.
+
+    The leader's state carries the merged evaluated map, ledger union and
+    per-round records (stats summed across shards); ``fleet_stats`` reports
+    the cross-process accounting — combined tasks executed, corrupt-entry
+    reads observed anywhere in the fleet (must stay 0), double-writes the
+    per-key locks elided, and cross-process store rehydrations.
+    """
+    if n_procs < 1:
+        raise ValueError("run_fleet_study needs n_procs >= 1")
+    # the leader never evaluates (its evaluate_delta hook farms every delta
+    # out), so a build that offers a ``leader`` flag may skip constructing
+    # the objective's heavy parts (e.g. reference segmentations)
+    import inspect
+
+    leader_kwargs = dict(build_kwargs or {})
+    if "leader" in inspect.signature(build).parameters:
+        leader_kwargs["leader"] = True
+    spec = build(**leader_kwargs)
+    from repro.engine.types import DEFAULT_CACHE_BYTES
+    from repro.runtime.storage import SharedStore
+
+    store = SharedStore(store_ram_bytes, disk_dir=store_dir)
+    state = StudyState(
+        spec["space"],
+        seed=seed,
+        cache_bytes=cache_bytes or DEFAULT_CACHE_BYTES,
+        store=store,
+    )
+    fleet_stats: Dict[str, Any] = {
+        "n_procs": n_procs,
+        "shards_dispatched": 0,
+        "corrupt": 0,
+        "dedup_writes": 0,
+        "store_disk_hits": 0,
+    }
+    # `pool` is assigned below, after the driver is built — creating the
+    # worker processes last means a bad driver argument cannot leak a
+    # spawned pool. The closure only runs inside driver.run().
+    pool = None
+    # ledger entries already broadcast to the pool: each round ships only
+    # the union's delta, keeping per-round IPC proportional to new work
+    # instead of total study size. (A worker idle for a round misses that
+    # round's delta, which can only undercount its known_nodes STATS — the
+    # store serves the values regardless of ledger annotations, so results
+    # and reuse are unaffected.)
+    broadcast: set = set()
+
+    def fleet_evaluate(
+        delta: Sequence[ParamSet],
+    ) -> Tuple[Dict[ParamSet, float], Dict[str, int]]:
+        # contiguous block shards: samplers emit structurally-related runs
+        # adjacently (a MOAT trajectory, a Saltelli radial block), so blocks
+        # keep deep shared prefixes on ONE worker — the cross-worker overlap
+        # left is mostly roots, which the SharedStore dedups
+        chunk = (len(delta) + n_procs - 1) // n_procs
+        shards = [list(delta[i * chunk:(i + 1) * chunk]) for i in range(n_procs)]
+        shards = [s for s in shards if s]
+        ledger_entries = sorted(set(state.ledger.to_list()) - broadcast)
+        broadcast.update(ledger_entries)
+        payloads = pool.map(
+            _fleet_worker_eval,
+            [
+                ([_ps_to_json(ps) for ps in shard], ledger_entries)
+                for shard in shards
+            ],
+            chunksize=1,
+        )
+        state.merge_fleet(payloads)
+        y_by_ps: Dict[ParamSet, float] = {}
+        agg = {"planned_tasks": 0, "planned_known": 0, "tasks_executed": 0,
+               "cache_hits": 0}
+        for shard, p in zip(shards, payloads):
+            for ps, (_ps_j, y) in zip(shard, p["evaluated"]):
+                y_by_ps[ps] = float(y)
+            for k in agg:
+                agg[k] += int(p["stats"].get(k, 0))
+            fleet_stats["corrupt"] += int(p["corrupt"])
+            fleet_stats["dedup_writes"] += int(p["dedup_writes"])
+            fleet_stats["store_disk_hits"] += int(p["store_disk_hits"])
+        fleet_stats["shards_dispatched"] += len(shards)
+        return y_by_ps, agg
+
+    driver = StudyDriver(
+        spec["workflow"],
+        spec["space"],
+        spec["inputs"],
+        objective=spec["objective"],
+        state=state,
+        seed=seed,
+        engine_policy=engine_policy,
+        cluster=cluster,
+        sa_policy=sa_policy,
+        samplers=samplers,
+        n_boot=n_boot,
+        input_keys=spec.get("input_keys"),
+        evaluate_delta=fleet_evaluate,
+    )
+    pool = multiprocessing.get_context(mp_context).Pool(
+        n_procs,
+        initializer=_fleet_worker_init,
+        initargs=(
+            build,
+            build_kwargs,
+            store.disk_dir,
+            store_ram_bytes,
+            seed,
+            engine_policy,
+            cluster,
+            cache_bytes,
+        ),
+    )
+    try:
+        driver.run(max_rounds=max_rounds)
+    finally:
+        pool.close()
+        pool.join()
+        driver.close()
+    fleet_stats["corrupt"] += state.store.corrupt
+    fleet_stats["tasks_executed"] = state.tasks_executed
+    fleet_stats["tasks_requested"] = state.tasks_requested
+    fleet_stats["committed_keys"] = len(store.committed_keys())
+    return state, fleet_stats

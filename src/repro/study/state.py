@@ -142,6 +142,18 @@ class StudyState:
                 self.active.remove(name)
                 self.frozen[name] = anchor[name]
 
+    def merge_fleet(self, payloads: List[Dict[str, Any]]) -> None:
+        """Fold fleet-worker round payloads (``repro.study.run_fleet_study``)
+        into this state — the fleet-merge path: each worker evaluated a
+        shard of the round's delta against the shared store, and the union
+        of their evaluated objectives and committed ledger keys is what
+        round N+1 proposes and plans against. Objectives are pure functions
+        of (input, params), so merge order cannot change a value."""
+        for p in payloads:
+            for ps_json, y in p.get("evaluated", ()):
+                self.evaluated.setdefault(_ps_from_json(ps_json), float(y))
+            self.ledger.merge(p.get("ledger", ()))
+
     @property
     def tasks_requested(self) -> int:
         return sum(r.tasks_requested for r in self.rounds)
