@@ -1,0 +1,122 @@
+"""Thread vs process WorkerBackend on the streaming workload (DESIGN.md
+§13) — ``BENCH_rpc.json``.
+
+The dispatch boundary's cost model, measured: the same hybrid plan over the
+same tiles executed through (a) the in-process :class:`ThreadBackend` and
+(b) the :class:`ProcessRpcBackend` — N spawn worker processes, a
+length-prefixed pickle control plane, and every bucket result crossing the
+boundary as a SharedStore key (commit-to-disk on the worker, hydrate on the
+leader). Reports wall-clock, throughput, parallel efficiency and the
+per-backend dispatch counts.
+
+Asserted (the conformance claims at benchmark scale):
+
+* **bit-identical outputs** — every mask from the process backend equals
+  the thread backend's, per tile per run (results-by-store-reference is an
+  optimization, never an approximation);
+* **real dispatch** — both sessions route every bucket through their
+  declared backend (dispatch_counts name exactly one backend each).
+
+The process backend pays spawn + store round-trips on container-scale
+tiles, so thread wins small; the interesting number is the gap closing as
+task cost grows — the paper's multi-node regime is where the boundary
+earns its keep (workers on other hosts, which threads cannot reach at
+all).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.app import synthetic_tile
+from repro.app.pipeline import build_workflow, pathology_rpc_build
+from repro.engine import ClusterSpec, execute_plan, execute_study, plan_study
+from repro.runtime import ProcessRpcBackend
+
+from benchmarks.common import SMOKE, moat_param_sets
+
+N_WORKERS = 2
+
+
+def run(csv: List[str]) -> None:
+    size = 32 if SMOKE else 56
+    n_tiles = 2 if SMOKE else 4
+    n_runs = 8 if SMOKE else 24
+    wf = build_workflow(size, size)
+    sets = moat_param_sets(n_runs, seed=9)
+    n_runs = len(sets)  # MOAT rounds to whole trajectories of dim+1 runs
+    plan = plan_study(wf, sets, policy="hybrid", max_bucket_size=8, active_paths=2)
+    tiles_np = [synthetic_tile(size, size, seed=t) for t in range(n_tiles)]
+    tiles = [{"raw": jnp.asarray(im)} for im in tiles_np]
+
+    execute_plan(plan, tiles[0])  # warm: jit compile every task variant
+
+    # ---------------- thread backend (the in-process oracle) -------------
+    t0 = time.perf_counter()
+    thread_stream = execute_study(
+        plan, tiles, cluster=ClusterSpec(n_workers=N_WORKERS)
+    )
+    t_thread = time.perf_counter() - t0
+    assert thread_stream.backend == "thread"
+    assert set(thread_stream.dispatch_counts) == {"thread"}
+    csv.append(
+        f"rpc_thread_workers{N_WORKERS},{t_thread*1e6/n_tiles:.0f},"
+        f"throughput={thread_stream.throughput:.2f}tiles_s"
+        f"_eff={thread_stream.parallel_efficiency:.2f}"
+        f"_dispatched={thread_stream.dispatch_counts.get('thread', 0)}"
+    )
+
+    # ---------------- process backend (RPC boundary) ---------------------
+    # store_dir=None: the backend owns a throwaway tempdir, so the
+    # cleanup() below actually removes it (a caller-supplied dir would be
+    # treated as a persistent reuse pool and left alone). The session is
+    # external so the store can be inspected BEFORE close() purges the
+    # transient rpc:* transport entries.
+    backend = ProcessRpcBackend(
+        build=pathology_rpc_build,
+        build_kwargs={"images": tiles_np},
+    )
+    from repro.runtime import Manager
+
+    mgr = Manager(backend=backend)
+    mgr.start(N_WORKERS)
+    try:
+        t0 = time.perf_counter()
+        proc_stream = execute_study(
+            plan, tiles, cluster=ClusterSpec(n_workers=N_WORKERS), manager=mgr
+        )
+        t_proc = time.perf_counter() - t0
+        assert proc_stream.backend == "process"
+        assert set(proc_stream.dispatch_counts) == {"process"}
+
+        # bit-identical across the boundary: every mask, every tile, run
+        for i in range(n_tiles):
+            for rid in range(n_runs):
+                assert np.array_equal(
+                    np.asarray(proc_stream.outputs[i][rid]["mask"]),
+                    np.asarray(thread_stream.outputs[i][rid]["mask"]),
+                ), f"tile {i} run {rid} diverged across the RPC boundary"
+
+        # results only ever crossed as store keys: the live store still
+        # serves every bucket's committed entry (checked pre-purge)
+        committed = [
+            k for k in backend.store.committed_keys() if k.startswith("rpc:")
+        ]
+        assert committed, "no store commits?"
+        assert backend.store.get(committed[0]) is not None
+    finally:
+        mgr.close()
+        backend.cleanup()  # throwaway tempdir store; drop it once inspected
+
+    csv.append(
+        f"rpc_process_workers{N_WORKERS},{t_proc*1e6/n_tiles:.0f},"
+        f"throughput={proc_stream.throughput:.2f}tiles_s"
+        f"_eff={proc_stream.parallel_efficiency:.2f}"
+        f"_dispatched={proc_stream.dispatch_counts.get('process', 0)}"
+        f"_committed_keys={len(committed)}"
+        f"_vs_thread={t_proc/max(t_thread,1e-9):.2f}x"
+    )

@@ -14,6 +14,12 @@ Usage (README-level):
 
     PYTHONPATH=src python examples/sa_pathology.py [--runs 48] [--tiles 4]
                                                    [--workers 2] [--size 72]
+                                                   [--backend thread|process]
+
+    # --backend process swaps the Manager's Worker pool for RPC worker
+    # PROCESSES behind the same WorkerBackend API (DESIGN.md §13): spawn
+    # workers rebuild the workflow+plan from picklable specs, and results
+    # cross the process boundary only as SharedStore keys.
 
     # Adaptive mode (DESIGN.md §11): a multi-round MOAT -> prune -> VBD ->
     # refine study driven by repro.study.StudyDriver — one persistent
@@ -71,13 +77,17 @@ def run_adaptive(args) -> None:
         max_rounds=args.rounds,
         n_workers=args.workers,
         seed=3,
+        backend=args.backend,
     )
+    dispatch = ", ".join(f"{k}={v}" for k, v in out["dispatch_counts"].items())
     print(
-        f"adaptive study: {out['rounds']} rounds, "
+        f"adaptive study [{out['backend']} backend, {dispatch or 'no dispatch'}]: "
+        f"{out['rounds']} rounds, "
         f"{out['tasks_executed']}/{out['tasks_requested']} tasks executed "
         f"(reuse factor {out['reuse_factor']:.2f}x), "
         f"cache {out['cache_hits']} hits / {out['cache_misses']} misses / "
-        f"{out['cache_spills']} spills, {out['wall_seconds']:.1f}s"
+        f"{out['cache_spills']} spills / {out['cache_flushed']} flushed, "
+        f"{out['wall_seconds']:.1f}s"
     )
     for r in out["rounds_detail"]:
         known = f", {r['planned_known']} known from prior rounds" if r["planned_known"] else ""
@@ -143,6 +153,10 @@ def main() -> None:
                          "pooling one SharedStore")
     ap.add_argument("--store-dir", default=None,
                     help="SharedStore directory for --fleet (default: fresh tmpdir)")
+    ap.add_argument("--backend", choices=("thread", "process"), default="thread",
+                    help="WorkerBackend for the study's Manager session: "
+                         "in-process Worker threads (default) or RPC worker "
+                         "processes with results pooled via a SharedStore")
     args = ap.parse_args()
 
     if args.fleet > 0:
@@ -166,10 +180,16 @@ def main() -> None:
     print(f"plan: {plan.tasks_executed}/{plan.tasks_total} tasks "
           f"({plan.reuse_fraction*100:.0f}% reuse) in {plan.bucket_count()} buckets")
 
-    tiles = [
-        {"raw": jnp.asarray(synthetic_tile(args.size, args.size, seed=t))}
-        for t in range(args.tiles)
-    ]
+    tiles_np = [synthetic_tile(args.size, args.size, seed=t) for t in range(args.tiles)]
+    tiles = [{"raw": jnp.asarray(im)} for im in tiles_np]
+    backend = None
+    if args.backend == "process":
+        from repro.app.pipeline import pathology_rpc_build
+        from repro.runtime import ProcessRpcBackend
+
+        backend = ProcessRpcBackend(
+            build=pathology_rpc_build, build_kwargs={"images": tiles_np}
+        )
 
     # reference masks first: the 1-run reference plan, streamed over all
     # tiles — also serves as the jit warm-up so the timings below are fair
@@ -182,8 +202,12 @@ def main() -> None:
     t_naive = (time.perf_counter() - t0) * (len(sets) * args.tiles) / len(sub)
 
     t0 = time.perf_counter()
-    stream = execute_study(plan, tiles, cluster=cluster)
-    t_hybrid = time.perf_counter() - t0
+    try:
+        stream = execute_study(plan, tiles, cluster=cluster, backend=backend)
+        t_hybrid = time.perf_counter() - t0  # before cleanup: timing the
+    finally:                                 # study, not the rmtree
+        if backend is not None:
+            backend.cleanup()  # throwaway tempdir store
 
     all_scores = {
         rid: [float(dice(stream.outputs[t][rid]["mask"], ref_masks[t]))
@@ -193,7 +217,7 @@ def main() -> None:
     mean_scores = [1.0 - float(np.mean(all_scores[r])) for r in range(len(sets))]
     print(f"naive (est) {t_naive:.1f}s vs streaming engine(hybrid) {t_hybrid:.1f}s "
           f"-> {t_naive/max(t_hybrid,1e-9):.2f}x  "
-          f"[{stream.throughput:.2f} tiles/s, "
+          f"[{stream.backend} backend, {stream.throughput:.2f} tiles/s, "
           f"eff={stream.parallel_efficiency:.2f}, "
           f"{stream.manager_sessions} Manager session]")
     corr = correlation_indices(SPACE, sets, mean_scores)

@@ -168,6 +168,10 @@ def build_segmentation_stage(
     return StageSpec(name="segmentation", tasks=tasks)
 
 
+def _t_normalize(state):
+    return {"rgb": ops.normalize_tile(state["raw"])}
+
+
 def build_workflow(h: int, w: int, costs: Optional[Dict[str, float]] = None) -> Workflow:
     px = h * w
     norm = StageSpec(
@@ -176,7 +180,7 @@ def build_workflow(h: int, w: int, costs: Optional[Dict[str, float]] = None) -> 
             TaskSpec(
                 name="normalize",
                 param_names=(),
-                fn=lambda s: {"rgb": ops.normalize_tile(s["raw"])},
+                fn=_t_normalize,
                 cost=1.0,
                 output_bytes=12 * px,
             ),
@@ -189,6 +193,58 @@ def build_workflow(h: int, w: int, costs: Optional[Dict[str, float]] = None) -> 
 # --------------------------------------------------------------------------
 # SA study drivers: thin callers of the StudyPlanner engine.
 # --------------------------------------------------------------------------
+
+
+def pathology_rpc_build(
+    images: Sequence[np.ndarray], costs: Optional[Dict[str, float]] = None
+) -> Dict[str, Any]:
+    """Spawn-picklable ``build`` for the RPC process backend
+    (:class:`repro.runtime.ProcessRpcBackend`): each worker process calls
+    this once to construct its own workflow and input states from the tile
+    arrays shipped in the build kwargs — inputs ride the spawn boundary
+    once, at worker start; results only ever come back as SharedStore keys.
+    """
+    images = [np.asarray(im) for im in images]
+    h, w = images[0].shape[:2]
+    return {
+        "workflow": build_workflow(h, w, costs),
+        "inputs": [{"raw": jnp.asarray(im)} for im in images],
+    }
+
+
+def _backend_for(
+    backend: Any,
+    images: Sequence[np.ndarray],
+    costs: Optional[Dict[str, float]],
+    store_dir: Optional[str] = None,
+) -> Any:
+    """Resolve the app-level ``backend`` spec: ``None``/``"thread"`` pass
+    through to the Manager's default; ``"process"`` builds a
+    ProcessRpcBackend whose workers reconstruct this exact study via
+    :func:`pathology_rpc_build`; a constructed WorkerBackend passes
+    through untouched. ``store_dir`` mounts the workers' stores on a
+    caller-owned directory (the adaptive study's persistent pool, so a
+    resumed study still rehydrates the workers' task outputs); without it
+    the backend owns a throwaway tempdir the caller must ``cleanup()``."""
+    if backend == "process":
+        from repro.runtime import ProcessRpcBackend
+
+        return ProcessRpcBackend(
+            build=pathology_rpc_build,
+            build_kwargs={
+                "images": [np.asarray(im) for im in images],
+                "costs": costs,
+            },
+            store_dir=store_dir,
+        )
+    return backend
+
+
+def _backend_cleanup(spec: Any, backend_obj: Any) -> None:
+    """Release a backend `_backend_for` constructed (drop a throwaway
+    tempdir store); caller-provided backends are untouched."""
+    if spec == "process" and hasattr(backend_obj, "cleanup"):
+        backend_obj.cleanup()
 
 
 def _round_detail(r: Any) -> Dict[str, Any]:
@@ -251,6 +307,7 @@ def run_study(
     costs: Optional[Dict[str, float]] = None,
     n_workers: int = 1,
     memory_budget_bytes: Optional[int] = None,
+    backend: Any = None,
 ) -> Dict[str, Any]:
     """Execute an SA study over one tile and return per-run Dice + counters.
 
@@ -258,7 +315,10 @@ def run_study(
     "rtma", "rmsr", "hybrid"}; ``max_bucket_size`` bounds RTMA/hybrid
     merging (default rtma→8; rmsr merges maximally, the paper's headline
     configuration). ``n_workers`` dispatches buckets demand-driven through
-    the Manager.
+    the Manager. ``backend`` picks the session's WorkerBackend —
+    ``"thread"`` (default) or ``"process"`` for RPC worker processes
+    pooling results through a SharedStore (the reference segmentation stays
+    in-process: it is a single run).
 
     ``tasks_executed`` is the MEASURED count (cache hits subtracted) —
     the same semantics as ``run_dataset_study`` — while
@@ -276,7 +336,11 @@ def run_study(
         memory_budget_bytes=memory_budget_bytes,
     )
     raw = {"raw": jnp.asarray(image)}
-    result = execute_plan(plan, raw)
+    backend_obj = _backend_for(backend, [image], costs)
+    try:
+        result = execute_plan(plan, raw, backend=backend_obj)
+    finally:
+        _backend_cleanup(backend, backend_obj)
 
     ref_plan = plan_study(wf, [ref_params], policy="rmsr", active_paths=1)
     ref_mask = execute_plan(ref_plan, raw).outputs[0]["mask"]
@@ -299,6 +363,9 @@ def run_study(
         "cache_hits": result.cache_hits,
         "cache_misses": result.cache_misses,
         "cache_spills": result.cache_spills,
+        "backend": result.backend,
+        "dispatch_counts": dict(result.dispatch_counts),
+        "cache_flushed": 0,  # no persistent spill store in one-shot mode
         "plan": plan,
     }
 
@@ -314,6 +381,7 @@ def run_dataset_study(
     costs: Optional[Dict[str, float]] = None,
     n_workers: int = 2,
     memory_budget_bytes: Optional[int] = None,
+    backend: Any = None,
 ) -> Dict[str, Any]:
     """Dataset-level SA study: many tiles streamed through ONE plan and one
     persistent Manager session (DESIGN.md §10).
@@ -322,6 +390,9 @@ def run_dataset_study(
     tile A can be in segmentation while tile B normalizes. Returns per-tile
     Dice lists plus the streaming throughput/parallel-efficiency metrics.
     All tiles must share one shape (the plan's byte model is shape-exact).
+    ``backend`` picks the session's WorkerBackend (``"thread"`` default,
+    ``"process"`` for RPC worker processes); the single-run reference
+    segmentation always executes in-process.
     """
     images = list(images)
     if not images:
@@ -339,7 +410,11 @@ def run_dataset_study(
         memory_budget_bytes=memory_budget_bytes,
     )
     raws = [{"raw": jnp.asarray(im)} for im in images]
-    stream = execute_study(plan, raws, cluster=cluster)
+    backend_obj = _backend_for(backend, images, costs)
+    try:
+        stream = execute_study(plan, raws, cluster=cluster, backend=backend_obj)
+    finally:
+        _backend_cleanup(backend, backend_obj)
 
     ref_plan = plan_study(wf, [ref_params], policy="rmsr", active_paths=1)
     ref_stream = execute_study(ref_plan, raws, cluster=cluster)
@@ -366,6 +441,8 @@ def run_dataset_study(
         "throughput": stream.throughput,
         "parallel_efficiency": stream.parallel_efficiency,
         "manager_sessions": stream.manager_sessions,
+        "backend": stream.backend,
+        "dispatch_counts": dict(stream.dispatch_counts),
         "retries": stream.retries,
         "backups_launched": stream.backups_launched,
         "wall_seconds": time.perf_counter() - t0,
@@ -390,6 +467,7 @@ def run_adaptive_study(
     costs: Optional[Dict[str, float]] = None,
     store_dir: Optional[str] = None,
     sa_policy: Optional[Any] = None,
+    backend: Any = None,
 ) -> Dict[str, Any]:
     """Adaptive MOAT → prune → VBD → refine study over tiles (DESIGN.md §11).
 
@@ -445,14 +523,29 @@ def run_adaptive_study(
         n_boot=n_boot,
         input_keys=[f"tile{i}" for i in range(len(images))],
         store_dir=store_dir,
+        # the workers' spill stores mount the SAME store_dir as the
+        # study state, so a resumed study rehydrates worker-computed task
+        # outputs too — without it, backend="process" would silently lose
+        # the zero-recompute-resume guarantee (the workers' caches are
+        # where the results live in spec mode)
+        backend=_backend_for(backend, images, costs, store_dir=store_dir),
     )
     try:
         state = driver.run(max_rounds=max_rounds)
+        # publish barrier: push the round-persistent cache through to the
+        # store's disk tier and report how many entries that persisted. In
+        # process-backend mode the leader cache is structurally empty — the
+        # workers own the caches and flush them at each round install and
+        # again at session shutdown (driver.close below) — so 0 here means
+        # the durability lives worker-side, not that results were lost.
+        cache_flushed = state.cache.flush()
         summary = driver.summary()
     finally:
         driver.close()
+        _backend_cleanup(backend, driver.backend)
     return {
         **summary,
+        "cache_flushed": cache_flushed,
         "wall_seconds": time.perf_counter() - t0,
         "rounds_detail": [_round_detail(r) for r in state.rounds],
         "reference_masks": [np.asarray(m) for m in ref_masks],
@@ -526,6 +619,7 @@ def run_fleet_study(
     n_boot: int = 16,
     sa_policy: Optional[Any] = None,
     samplers: Optional[Dict[str, Any]] = None,
+    worker_backend: Any = None,
 ) -> Dict[str, Any]:
     """Adaptive pathology study executed by a fleet of ``n_procs``
     StudyDriver processes pooling one :class:`~repro.runtime.SharedStore`
@@ -556,6 +650,7 @@ def run_fleet_study(
         sa_policy=sa_policy,
         samplers=samplers,
         n_boot=n_boot,
+        worker_backend=worker_backend,
     )
     from repro.core.metrics import reuse_factor as _rf
 

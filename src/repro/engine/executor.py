@@ -134,21 +134,27 @@ class ResultCache:
         for k, v in spilled:
             self.spill_store.put(self._store_key(k), v)
 
-    def flush(self) -> None:
+    def flush(self) -> int:
         """Write every live entry through to the spill store's **disk**
         tier (durability barrier before persisting a StudyState, and the
         fleet workers' publish point — peers resolve the flushed keys on
         their next store consultation): the cache's RAM entries are pushed
         into the store, then the store's own RAM tier — which also holds
         previously-evicted entries that never reached disk — is persisted
-        wholesale. No-op without a spill store; entries stay admitted."""
+        wholesale. No-op without a spill store; entries stay admitted.
+
+        Returns the number of entries persisted to the disk tier (the
+        store-RAM snapshot ``persist_all`` wrote through, which includes
+        every cache entry just pushed) — 0 without a spill store. Callers
+        surface it in study summaries so a silent no-op flush is visible.
+        """
         if self.spill_store is None:
-            return
+            return 0
         with self._lock:
             snapshot = [(key, value) for key, (value, _) in self._entries.items()]
         for key, value in snapshot:
             self.spill_store.put(self._store_key(key), value)
-        self.spill_store.persist_all()
+        return self.spill_store.persist_all()
 
 
 def execute_bucket(
@@ -182,6 +188,7 @@ def execute_plan(
     input_state: Any,
     *,
     cluster: Optional[ClusterSpec] = None,
+    backend: Any = None,
 ) -> StudyResult:
     """Execute a :class:`StudyPlan` on one input, returning per-run outputs.
 
@@ -189,10 +196,12 @@ def execute_plan(
     pure, every bucket replays a frozen schedule, and stage routing is keyed
     by ``run_id`` alone. This is ``execute_study`` with a one-element
     dataset — same session machinery, same cache keying, same accounting.
+    ``backend`` is the session's WorkerBackend spec (default: in-process
+    Worker threads; pass a ``ProcessRpcBackend`` for RPC worker processes).
     """
     from repro.engine.streaming import execute_study  # circular at import time
 
-    stream = execute_study(plan, [input_state], cluster=cluster)
+    stream = execute_study(plan, [input_state], cluster=cluster, backend=backend)
     only = stream.per_input[0]
     return StudyResult(
         outputs=only.outputs,
@@ -205,4 +214,6 @@ def execute_plan(
         cache_misses=stream.cache_misses,
         cache_spills=stream.cache_spills,
         cache_rehydrations=stream.cache_rehydrations,
+        backend=stream.backend,
+        dispatch_counts=dict(stream.dispatch_counts),
     )

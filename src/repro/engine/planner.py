@@ -292,4 +292,17 @@ def plan_study(
         memory=memory,
         cluster=cluster,
         ledger_pending=ledger_pending,
+        # Everything needed to rebuild this plan against the same workflow
+        # in another process (planning is deterministic; the ledger only
+        # annotates counters, so it is deliberately absent). All values are
+        # picklable — ParamSets are tuples of (name, primitive).
+        recipe={
+            "param_sets": [tuple(ps) for ps in param_sets],
+            "policy": policy,
+            "max_bucket_size": max_bucket_size,
+            "active_paths": active_paths,
+            "workers": workers,
+            "memory_bytes": memory.bytes,
+            "cache_bytes": memory.cache_bytes,
+        },
     )

@@ -27,6 +27,7 @@ policy and worker count, while starting one Manager session instead of K.
 
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from typing import Any, List, Optional, Sequence
@@ -41,6 +42,12 @@ from repro.engine.types import (
 from repro.runtime.manager import Manager, WorkItem
 
 __all__ = ["execute_study"]
+
+# Unique plan ids for spec-capable backends: an external Manager session
+# may execute many plans (adaptive rounds), and worker processes cache the
+# rebuilt plans by this id.
+_PLAN_IDS = itertools.count()
+_PLAN_IDS_LOCK = threading.Lock()
 
 
 class _InputState:
@@ -68,6 +75,7 @@ def execute_study(
     cluster: Optional[ClusterSpec] = None,
     cache: Optional[ResultCache] = None,
     manager: Optional[Manager] = None,
+    backend: Any = None,
     input_keys: Optional[Sequence[Any]] = None,
     key_prefix: str = "",
 ) -> StudyStreamResult:
@@ -98,6 +106,16 @@ def execute_study(
     * ``key_prefix``— disambiguates WorkItem keys inside a shared session
       (the Manager memoises results by key, so two rounds submitting
       ``in0:…`` verbatim would collide).
+
+    ``backend`` selects the session's WorkerBackend (default: in-process
+    Worker threads; mutually exclusive with ``manager``, whose own backend
+    is used). With a **spec-capable** backend (``ProcessRpcBackend``) the
+    executor ships no closures: it broadcasts the plan's ``recipe`` (the
+    picklable planning arguments — workers rebuild the plan against their
+    own ``build()`` context) and each WorkItem carries a ``("bucket",
+    plan_id, input, stage, bucket)`` spec. Workers resolve stage inputs
+    from the shared store by deterministic result keys and commit outputs
+    back the same way, so only store keys ever cross the process boundary.
     """
     cluster = cluster or plan.cluster or ClusterSpec()
     inputs = list(inputs)
@@ -114,6 +132,7 @@ def execute_study(
     if manager is None:
         owns_manager = True
         mgr = Manager(
+            backend=backend,
             max_attempts=cluster.max_attempts,
             heartbeat_timeout=cluster.heartbeat_timeout,
             straggler_factor=cluster.straggler_factor,
@@ -122,9 +141,22 @@ def execute_study(
     else:
         owns_manager = False
         mgr = manager
+        if backend is not None:
+            raise ValueError(
+                "pass backend= when the executor owns the session; an "
+                "external Manager already carries its own backend"
+            )
         if not mgr.is_running:
             raise RuntimeError("external Manager session must be started")
+    spec_mode = bool(getattr(mgr.backend, "supports_specs", False))
+    plan_id: Optional[str] = None
+    if spec_mode and plan.recipe is None:
+        raise ValueError(
+            "this StudyPlan carries no recipe; re-plan with plan_study() to "
+            "execute it on a spec-capable (process) backend"
+        )
     retries0, backups0, busy0 = mgr.retries, mgr.backups_launched, mgr.busy_seconds
+    dispatch0 = dict(mgr.dispatch_counts)
     cache0 = (
         (cache.misses, cache.spills, cache.rehydrations)
         if cache is not None
@@ -150,15 +182,19 @@ def execute_study(
                     fn=lambda b=bucket, s=src, k=input_keys[i]: execute_bucket(
                         b, s, cache, scope=("input", k) + b.cache_scope
                     ),
+                    # spec-capable backends ship this instead of the
+                    # closure; workers hold the same plan (rebuilt from the
+                    # recipe) and resolve src from the shared store
+                    spec=("bucket", plan_id, i, si, bi) if spec_mode else None,
                     callback=lambda _key, value, i=i, si=si: on_bucket(i, si, value),
                 )
             )
 
     def on_bucket(i: int, si: int, value: Any) -> None:
-        """Per-item completion callback (Worker thread, outside Manager
-        lock): fold the bucket into input i's stage accumulator; when the
-        stage closes, route outputs and submit the next stage — the
-        per-input dependency edge."""
+        """Per-item completion callback (Manager pump thread, outside the
+        Manager lock): fold the bucket into input i's stage accumulator;
+        when the stage closes, route outputs and submit the next stage —
+        the per-input dependency edge."""
         st = states[i]
         advance = False
         with lock:
@@ -193,6 +229,19 @@ def execute_study(
     t0 = time.perf_counter()
     if owns_manager:
         mgr.start(cluster.n_workers)
+    if spec_mode:
+        # Broadcast the study context before any lease can reference it
+        # (pipes are ordered). The plan id is session-unique so adaptive
+        # rounds sharing one session never collide in the workers' caches.
+        with _PLAN_IDS_LOCK:
+            plan_id = f"plan{next(_PLAN_IDS)}"
+        mgr.backend.install_study(
+            plan_id=plan_id,
+            recipe=plan.recipe,
+            key_prefix=key_prefix,
+            input_keys=list(input_keys),
+            cache_enabled=plan.cache_enabled,
+        )
     try:
         for i in range(len(inputs)):
             states[i].t_submit = time.perf_counter()
@@ -221,6 +270,11 @@ def execute_study(
         )
         for st in states
     ]
+    dispatch_delta = {
+        name: count - dispatch0.get(name, 0)
+        for name, count in mgr.dispatch_counts.items()
+        if count - dispatch0.get(name, 0)
+    }
     return StudyStreamResult(
         outputs={i: r.outputs for i, r in enumerate(per_input)},
         per_input=per_input,
@@ -238,4 +292,6 @@ def execute_study(
         cache_rehydrations=(
             (cache.rehydrations - cache0[2]) if cache is not None else 0
         ),
+        backend=mgr.backend_name,
+        dispatch_counts=dispatch_delta,
     )

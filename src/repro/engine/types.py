@@ -153,6 +153,13 @@ class StudyPlan:
     # plan introduces that the TrieLedger did not know. The caller commits
     # them (ledger.add_all) once the plan has executed successfully.
     ledger_pending: Optional[List[Tuple[Any, ...]]] = None
+    # The picklable planning arguments this plan was built from (param
+    # sets, policy, bucketing knobs, memory budget). Planning is
+    # deterministic, so a worker process holding the same Workflow rebuilds
+    # a structurally identical plan from the recipe — how a StudyPlan
+    # crosses the RPC boundary without serialising task closures
+    # (DESIGN.md §13).
+    recipe: Optional[Dict[str, Any]] = None
 
     @property
     def tasks_total(self) -> int:
@@ -226,6 +233,10 @@ class StudyResult:
     cache_misses: int = 0
     cache_spills: int = 0
     cache_rehydrations: int = 0
+    # which WorkerBackend dispatched this execution, and how many leases it
+    # was handed (this call's delta of Manager.dispatch_counts)
+    backend: str = "thread"
+    dispatch_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -261,6 +272,10 @@ class StudyStreamResult:
     cache_misses: int = 0
     cache_spills: int = 0
     cache_rehydrations: int = 0
+    # which WorkerBackend the session dispatched through, and the leases it
+    # was handed during this study (delta of Manager.dispatch_counts)
+    backend: str = "thread"
+    dispatch_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def throughput(self) -> float:

@@ -1,8 +1,20 @@
-"""Distributed runtime: Manager-Worker demand-driven dispatch, hierarchical
-storage, fault tolerance (heartbeats/retry/backup tasks), elastic scaling,
-and the paper-scale cluster simulator."""
+"""Distributed runtime: Manager-Worker demand-driven dispatch behind the
+transport-agnostic WorkerBackend boundary (threads or RPC worker
+processes), hierarchical storage, fault tolerance (heartbeats/retry/backup
+tasks), elastic scaling, and the paper-scale cluster simulator."""
 
 from repro.runtime.manager import Manager, WorkItem, run_study_distributed  # noqa: F401
+from repro.runtime.transport import (  # noqa: F401
+    Completion,
+    Lease,
+    ProcessRpcBackend,
+    RemoteTaskError,
+    ThreadBackend,
+    TransportError,
+    WorkerBackend,
+    WorkerStatus,
+    make_backend,
+)
 from repro.runtime.simulator import (  # noqa: F401
     ClusterSim,
     StreamSim,

@@ -1,13 +1,15 @@
-"""Manager-Worker demand-driven runtime (paper §II: RTF execution model),
-with the fault-tolerance features a 1000-node deployment needs:
+"""Manager — the demand-driven scheduler of the runtime (paper §II: RTF
+execution model), with the fault-tolerance features a 1000-node deployment
+needs:
 
-* demand-driven dispatch — Workers pull the next bucket when free (natural
-  load balancing, same as the paper's 92%-efficiency runs);
+* demand-driven dispatch — Workers receive the next bucket when free
+  (natural load balancing, same as the paper's 92%-efficiency runs);
 * heartbeats + retry — a bucket whose Worker misses its heartbeat deadline
   is re-enqueued (at-least-once; results are idempotent because tasks are
   pure functions of (input, params)); the deadline adapts to observed
   bucket times so a long-running bucket (e.g. a first-time jit compile) is
-  not mistaken for a dead Worker;
+  not mistaken for a dead Worker, and a lease whose Worker is *provably*
+  dead (a killed worker process) is re-enqueued immediately;
 * straggler mitigation — when the queue is empty and a bucket has been
   running longer than ``straggler_factor`` × the median bucket time, a
   backup copy is launched on an idle Worker; first completion wins (the
@@ -15,21 +17,29 @@ with the fault-tolerance features a 1000-node deployment needs:
 * elastic scaling — Workers can join/leave between buckets; the Manager
   only tracks outstanding leases.
 
+Since DESIGN.md §13 the Manager is a **pure scheduler/bookkeeper**: it owns
+the queue, lease table, retry/backup policy and result memoisation, and
+executes nothing itself. Execution happens behind the
+:class:`~repro.runtime.transport.WorkerBackend` protocol — ``Manager()``
+defaults to a :class:`~repro.runtime.transport.ThreadBackend` (the
+historical in-process Worker pool), and ``Manager(backend=
+ProcessRpcBackend(...))`` drives real worker processes through the same
+scheduling semantics, results crossing the boundary only as SharedStore
+keys. A single pump thread drives the loop: poll completions → settle/fail
+→ expire dead/stale leases → offer leases to free workers.
+
 Sessions are **long-lived** (DESIGN.md §10): ``start`` spawns the Worker
 pool once, ``submit`` is legal while Workers are running (including from a
-completion callback on a Worker thread), ``drain`` blocks until every
-submitted item has a result, and ``close`` retires the pool. The one-shot
-``run`` wrapper keeps the original batch semantics on top of the same
-machinery. Per-item completion callbacks fire exactly once per key — on the
-*first* completion, under the same lock that records the result — so a
-raced straggler backup can never double-report; the callback body itself
-runs outside the lock so it may re-enter ``submit`` (how the streaming
-executor chains per-input stage edges).
-
-Workers here are threads driving real JAX execution (the container is one
-node); across real nodes the same Manager logic fronts an RPC boundary —
-the scheduling semantics are identical, which is what the fig8 benchmark
-models at 256 nodes.
+completion callback), ``drain`` blocks until every submitted item has a
+result, and ``close`` retires the pool — idempotent, callable from any
+thread, and safe to race with ``drain`` (an explicit guarded state
+transition, not thread-join ordering). The one-shot ``run`` wrapper keeps
+the original batch semantics on top of the same machinery. Per-item
+completion callbacks fire exactly once per key — on the *first* completion,
+under the same lock that records the result — so a raced straggler backup
+can never double-report; the callback body runs outside the lock so it may
+re-enter ``submit`` (how the streaming executor chains per-input stage
+edges).
 """
 
 from __future__ import annotations
@@ -40,24 +50,42 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.runtime.transport import (
+    Completion,
+    Lease,
+    RemoteTaskError,
+    WorkerStatus,
+    make_backend,
+)
+
 __all__ = ["WorkItem", "Manager", "run_study_distributed"]
 
-# How long an idle Worker sleeps between wake-up checks; bounds the latency
-# of straggler/heartbeat detection while the queue is empty.
+# How long the pump blocks per completion poll; bounds the latency of
+# straggler/heartbeat detection while the system is idle.
 _IDLE_TICK = 0.02
+
+# A worker heartbeat younger than this proves its leases live (only for
+# backends whose heartbeats keep flowing mid-task); staler workers fall
+# back to age-based expiry, so a wedged-but-running process still recovers.
+_LIVENESS_FRESH = 5.0
+
+# Session states — the explicit close()/drain() transition guard.
+_NEW, _RUNNING, _CLOSING, _CLOSED = "new", "running", "closing", "closed"
 
 
 @dataclasses.dataclass
 class WorkItem:
     key: str
-    fn: Callable[[], Any]
+    fn: Optional[Callable[[], Any]] = None
     attempts: int = 0
     started_at: Optional[float] = None
-    worker: Optional[int] = None
     # Called exactly once, as fn's first completion (or permanent failure,
-    # with the Exception as the value) is recorded. Runs on the completing
-    # Worker's thread, outside the Manager lock.
+    # with the Exception as the value) is recorded. Runs on the Manager's
+    # pump thread, outside the Manager lock.
     callback: Optional[Callable[[str, Any], None]] = None
+    # Picklable task description for backends that cross a process
+    # boundary (transport.Lease ships it; fn never leaves this process).
+    spec: Optional[tuple] = None
 
 
 class Manager:
@@ -69,11 +97,13 @@ class Manager:
     def __init__(
         self,
         *,
+        backend: Any = None,
         max_attempts: int = 3,
         heartbeat_timeout: float = 60.0,
         straggler_factor: float = 3.0,
         enable_backup_tasks: bool = True,
     ):
+        self._backend = make_backend(backend)
         self._queue: "collections.deque[WorkItem]" = collections.deque()
         self._results: Dict[str, Any] = {}
         self._running: Dict[str, WorkItem] = {}
@@ -88,14 +118,14 @@ class Manager:
         # Recent-window of winning-attempt durations for the straggler /
         # heartbeat heuristics: bounded so a session spanning thousands of
         # inputs never grows the median computation, with the sorted median
-        # cached between appends (idle workers poll it every tick).
+        # cached between appends (the pump polls it every tick).
         self._durations: "collections.deque[float]" = collections.deque(maxlen=512)
         self._median_cache: Optional[float] = None
         self._busy_total = 0.0  # lifetime sum (the efficiency numerator)
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
-        self._threads: List[threading.Thread] = []
-        self._closed = False
+        self._pump_thread: Optional[threading.Thread] = None
+        self._state = _NEW
         self.max_attempts = max_attempts
         self.heartbeat_timeout = heartbeat_timeout
         self.straggler_factor = straggler_factor
@@ -103,12 +133,25 @@ class Manager:
         self.retries = 0
         self.backups_launched = 0
         self.heartbeat_expiries = 0
+        # Leases handed to each backend (keyed by backend name) over this
+        # Manager's lifetime — the per-backend dispatch accounting surfaced
+        # by study summaries.
+        self.dispatch_counts: Dict[str, int] = {}
+
+    @property
+    def backend(self):
+        """The WorkerBackend this session dispatches through."""
+        return self._backend
+
+    @property
+    def backend_name(self) -> str:
+        return getattr(self._backend, "name", type(self._backend).__name__)
 
     @property
     def is_running(self) -> bool:
-        """True between ``start`` and ``close`` — i.e. the session can
-        accept submissions and execute them."""
-        return bool(self._threads)
+        """True between ``start`` and the completion of ``close`` — i.e.
+        the session can still execute work."""
+        return self._state in (_RUNNING, _CLOSING)
 
     @property
     def busy_seconds(self) -> float:
@@ -134,24 +177,30 @@ class Manager:
     # Session lifecycle
     # ------------------------------------------------------------------
     def start(self, n_workers: int) -> None:
-        """Spawn the Worker pool. One session may span many stages and many
-        inputs; submitting while Workers run is the intended usage."""
-        if self._threads:
-            raise RuntimeError("Manager session already started")
-        self._closed = False
+        """Spawn the Worker pool through the backend and start the pump.
+        One session may span many stages and many inputs; submitting while
+        Workers run is the intended usage."""
+        with self._cond:
+            if self._state in (_RUNNING, _CLOSING):
+                raise RuntimeError("Manager session already started")
+            prev = self._state
+            self._state = _RUNNING
+        try:
+            self._backend.start(max(1, n_workers))
+        except BaseException:
+            with self._cond:  # roll back: no zombie "running" session with
+                self._state = prev  # no pump to ever settle submissions
+                self._cond.notify_all()
+            raise
         Manager.sessions_started += 1
-        self._threads = [
-            threading.Thread(target=self._worker, args=(i,), daemon=True)
-            for i in range(max(1, n_workers))
-        ]
-        for t in self._threads:
-            t.start()
+        self._pump_thread = threading.Thread(target=self._pump, daemon=True)
+        self._pump_thread.start()
 
     def submit(self, item: WorkItem) -> None:
         """Enqueue work; legal before ``start`` and while Workers run.
         Re-submitting a key that already has a result is a no-op."""
         with self._cond:
-            if self._closed:
+            if self._state in (_CLOSING, _CLOSED):
                 raise RuntimeError("Manager session is closed")
             if item.key in self._results:
                 return
@@ -169,13 +218,34 @@ class Manager:
                 self._cond.wait(_IDLE_TICK)
 
     def close(self) -> None:
-        """Retire the Worker pool (waits for in-flight attempts to return)."""
+        """Retire the Worker pool. Completes everything already submitted
+        first (in-flight attempts and queued work all settle), then shuts
+        the backend down.
+
+        Idempotent and thread-safe: a second ``close`` — from any thread,
+        including one racing ``drain`` — observes the guarded state
+        transition and simply waits for the first closer to finish instead
+        of double-joining the pool."""
         with self._cond:
-            self._closed = True
+            if self._state in (_NEW, _CLOSED):
+                self._state = _CLOSED
+                self._cond.notify_all()
+                return
+            if self._state == _CLOSING:
+                # another thread owns the shutdown: wait it out
+                while self._state != _CLOSED:
+                    self._cond.wait(_IDLE_TICK)
+                return
+            self._state = _CLOSING
             self._cond.notify_all()
-        for t in self._threads:
-            t.join()
-        self._threads = []
+            pump = self._pump_thread
+        if pump is not None:
+            pump.join()
+        self._backend.shutdown()
+        with self._cond:
+            self._state = _CLOSED
+            self._pump_thread = None
+            self._cond.notify_all()
 
     def results(self) -> Dict[str, Any]:
         with self._lock:
@@ -195,7 +265,7 @@ class Manager:
         holds a lease keeps its result, so the late completion dedups via
         first-completion-wins instead of resurrecting a value. Such keys
         join the deferred-forget set and are released when their last lease
-        settles — previously they leaked for the session's lifetime."""
+        settles."""
         with self._cond:
             keyset = set(keys)
             if not keyset:
@@ -225,9 +295,9 @@ class Manager:
         self._callbacks.pop(key, None)
 
     # ------------------------------------------------------------------
-    # Worker protocol
+    # Scheduling (pump-side)
     # ------------------------------------------------------------------
-    def _next_locked(self, worker_id: int) -> Optional[WorkItem]:
+    def _next_locked(self) -> Optional[WorkItem]:
         # Dequeue and lease registration are atomic under one lock: a peer
         # observing (queue empty, no leases) under that lock can therefore
         # conclude the system is idle — there is no window where an item has
@@ -244,7 +314,6 @@ class Manager:
             if item.key not in self._results:
                 break
         item.started_at = time.monotonic()
-        item.worker = worker_id
         # attempt numbers are issued centrally so concurrent attempts of
         # one key (original + backup) always hold distinct leases
         item.attempts = self._attempt_seq.get(item.key, 0) + 1
@@ -252,24 +321,93 @@ class Manager:
         self._running[f"{item.key}#{item.attempts}"] = item
         return item
 
-    def _expire_heartbeats_locked(self) -> None:
-        """Re-enqueue leases whose Worker missed the heartbeat deadline
-        (a Worker death mid-lease). The lease is released; if the presumed-
-        dead attempt does return later, first-completion-wins dedups it.
+    def _unlease_locked(self, item: WorkItem) -> None:
+        """Revert ``_next_locked`` for a lease no worker accepted (a slot
+        vanished between the demand snapshot and the offer — e.g. a worker
+        died). The attempt number is returned too: nothing outside this
+        process ever observed it."""
+        self._running.pop(f"{item.key}#{item.attempts}", None)
+        if self._attempt_seq.get(item.key) == item.attempts:
+            self._attempt_seq[item.key] = item.attempts - 1
+        if item.key not in self._results:
+            self._queue.appendleft(item)
 
-        In-process Workers cannot heartbeat while inside a task fn, so a
-        long bucket is indistinguishable from a dead Worker by age alone.
+    def _expire_dead_locked(
+        self, view: Dict[int, WorkerStatus], to_settle: List
+    ) -> None:
+        """Re-enqueue leases held by provably-dead workers (a worker
+        process that no longer exists). Unlike age-based expiry this is
+        immediate — there is no ambiguity to adapt a deadline around. A key
+        out of attempts with no other live lease settles as a permanent
+        failure (appended to ``to_settle``; the caller settles outside the
+        lock)."""
+        for status in view.values():
+            if status.alive:
+                continue
+            for lease_id in status.inflight:
+                item = self._running.pop(lease_id, None)
+                if item is None:
+                    continue
+                self.heartbeat_expiries += 1
+                if item.key in self._results:
+                    self._drain_deferred_locked(item.key)
+                    continue
+                if self._attempt_seq.get(item.key, 0) < self.max_attempts:
+                    self.retries += 1
+                    self._queue.append(
+                        WorkItem(key=item.key, fn=item.fn, spec=item.spec)
+                    )
+                    self._cond.notify()
+                elif not any(
+                    it.key == item.key for it in self._running.values()
+                ):
+                    to_settle.append(
+                        (
+                            item.key,
+                            item.attempts,
+                            RemoteTaskError(
+                                f"worker died holding the last attempt of "
+                                f"{item.key!r}"
+                            ),
+                        )
+                    )
+
+    def _expire_heartbeats_locked(
+        self, view: Optional[Dict[int, WorkerStatus]] = None
+    ) -> None:
+        """Re-enqueue leases whose Worker missed the heartbeat deadline.
+        The lease is released; if the presumed-dead attempt does return
+        later, first-completion-wins dedups it.
+
+        In-process Workers cannot prove liveness while inside a task fn, so
+        a long bucket is indistinguishable from a dead Worker by age alone.
         The deadline therefore adapts to observed bucket times — ``max(
         heartbeat_timeout, straggler_factor × median)`` — and with no
         completed-bucket history yet (e.g. the first bucket is a multi-
-        minute jit compile) nothing is ever expired."""
+        minute jit compile) nothing is ever expired.
+
+        ``view`` is passed only by backends whose heartbeats PROVE liveness
+        mid-task (the RPC backend's workers sign life from a side thread):
+        a lease held by a worker seen alive within ``_LIVENESS_FRESH``
+        seconds is never age-expired — a long bucket on a live remote
+        worker gets a straggler backup clone, not a revoked lease. A
+        wedged worker whose heartbeats stop re-enters age-based expiry.
+        (Provably-dead workers are handled separately and immediately by
+        ``_expire_dead_locked``.)"""
         median = self._median_locked()
         if median is None:
             return
         deadline = max(self.heartbeat_timeout, self.straggler_factor * median)
         now = time.monotonic()
+        proven_live: set = set()
+        if view is not None:
+            for status in view.values():
+                if status.alive and now - status.last_seen <= _LIVENESS_FRESH:
+                    proven_live.update(status.inflight)
         for lease, it in list(self._running.items()):
             if it.key in self._results:
+                continue
+            if lease in proven_live:
                 continue
             started = it.started_at or now
             if now - started <= deadline:
@@ -279,7 +417,7 @@ class Manager:
             del self._running[lease]
             self.heartbeat_expiries += 1
             self.retries += 1
-            self._queue.append(WorkItem(key=it.key, fn=it.fn))
+            self._queue.append(WorkItem(key=it.key, fn=it.fn, spec=it.spec))
             self._cond.notify()
 
     def _maybe_backup_locked(self) -> Optional[WorkItem]:
@@ -306,10 +444,12 @@ class Manager:
         age = now - (worst.started_at or now)
         if age > self.straggler_factor * max(median, 1e-3):
             self.backups_launched += 1
-            return WorkItem(key=worst.key, fn=worst.fn)
+            return WorkItem(key=worst.key, fn=worst.fn, spec=worst.spec)
         return None
 
-    def _settle(self, item: WorkItem, value: Any) -> None:
+    def _settle(
+        self, key: str, attempt: int, value: Any, duration: Optional[float]
+    ) -> None:
         """Record a final value (result or permanent failure) for a key and
         fire its callback exactly once. The key stays in ``_pending`` until
         the callback returns, so ``drain`` cannot observe a momentarily-empty
@@ -318,61 +458,150 @@ class Manager:
         cb = None
         won = False
         with self._cond:
-            self._running.pop(f"{item.key}#{item.attempts}", None)
-            if item.key not in self._results:  # first completion wins
+            self._running.pop(f"{key}#{attempt}", None)
+            if key not in self._results:  # first completion wins
                 won = True
-                self._results[item.key] = value
-                if item.started_at is not None and not isinstance(value, Exception):
-                    self._record_duration_locked(time.monotonic() - item.started_at)
-                cb = self._callbacks.pop(item.key, None)
-            self._drain_deferred_locked(item.key)
+                self._results[key] = value
+                if duration is not None and not isinstance(value, Exception):
+                    self._record_duration_locked(duration)
+                cb = self._callbacks.pop(key, None)
+            self._drain_deferred_locked(key)
             self._cond.notify_all()
         if not won:  # raced duplicate: the winner owns callback + pending
             return
         try:
             if cb is not None:
-                cb(item.key, value)
+                cb(key, value)
         finally:
             with self._cond:
-                self._pending.discard(item.key)
+                self._pending.discard(key)
                 self._cond.notify_all()
 
-    def _fail(self, item: WorkItem, err: Exception) -> None:
+    def _handle_completion(self, comp: Completion) -> None:
+        with self._cond:
+            item = self._running.get(comp.lease_id)
+        if comp.ok:
+            self._settle(comp.key, comp.attempt, comp.value, comp.duration)
+            return
+        err = comp.exc if comp.exc is not None else RemoteTaskError(
+            comp.error or "remote task failed"
+        )
         # Lease release and re-enqueue happen under one lock so peers never
         # observe (queue empty, no leases) while a retry is still in flight.
         with self._cond:
-            if item.attempts < self.max_attempts and item.key not in self._results:
-                self._running.pop(f"{item.key}#{item.attempts}", None)
+            self._running.pop(comp.lease_id, None)
+            if (
+                item is not None
+                and item.attempts < self.max_attempts
+                and item.key not in self._results
+            ):
                 self.retries += 1
                 # attempt numbers are issued by _next_locked at lease time
-                self._queue.append(WorkItem(key=item.key, fn=item.fn))
+                self._queue.append(
+                    WorkItem(key=item.key, fn=item.fn, spec=item.spec)
+                )
                 self._cond.notify()
                 return
-        self._settle(item, err)
+            if item is None and comp.key not in self._results:
+                # the lease was already expired and re-driven; this late
+                # failure report must not settle the key under the retry
+                return
+            if any(it.key == comp.key for it in self._running.values()):
+                # an out-of-attempts failure must not condemn the key while
+                # another attempt (straggler original / backup clone) is
+                # still live — first COMPLETION wins, and if that attempt
+                # also fails, ITS failure settles (it will find no live
+                # peer then). Same guard _expire_dead_locked applies.
+                return
+        self._settle(comp.key, comp.attempt, err, None)
 
-    def _worker(self, worker_id: int) -> None:
-        while True:
+    def _pump(self) -> None:
+        """The scheduling loop: one thread drives completions, expiry and
+        dispatch for the whole session, leaving execution entirely to the
+        backend. A structural backend failure fails the session's pending
+        work loudly instead of leaving ``drain`` waiting on a dead pump."""
+        try:
+            self._pump_loop()
+        except BaseException as pump_err:  # noqa: BLE001 — fail pending work
             with self._cond:
-                item = self._next_locked(worker_id)
+                stranded = {
+                    it.key for it in list(self._queue) + list(self._running.values())
+                } | set(self._pending)
+                self._queue.clear()
+                self._running.clear()
+            for key in stranded:
+                self._settle(
+                    key, 0,
+                    RemoteTaskError(f"dispatch pump failed: {pump_err!r}"),
+                    None,
+                )
+            with self._cond:  # keys that already had results stay settled
+                self._pending -= set(self._results)
+                self._cond.notify_all()
+            raise
+
+    def _pump_loop(self) -> None:
+        backend = self._backend
+        while True:
+            for comp in backend.poll_completions(_IDLE_TICK):
+                self._handle_completion(comp)
+            view = backend.heartbeat_view()
+            to_settle: List = []
+            with self._cond:
+                self._expire_dead_locked(view, to_settle)
+                self._expire_heartbeats_locked(
+                    view
+                    if getattr(backend, "heartbeats_prove_liveness", False)
+                    else None
+                )
+                if view and not any(st.alive for st in view.values()):
+                    # the whole pool is gone (every worker process died):
+                    # nothing can ever complete — fail what's left instead
+                    # of spinning forever
+                    for item in list(self._queue) + list(self._running.values()):
+                        if item.key not in self._results:
+                            to_settle.append(
+                                (
+                                    item.key,
+                                    item.attempts,
+                                    RemoteTaskError(
+                                        "every worker died; "
+                                        f"{item.key!r} can never complete"
+                                    ),
+                                )
+                            )
+                    self._queue.clear()
+                    self._running.clear()
+            for key, attempt, err in to_settle:
+                self._settle(key, attempt, err, None)
+            # demand-driven dispatch: one lease per free worker slot
+            free = sum(1 for st in view.values() if st.alive and not st.inflight)
+            while free > 0:
+                with self._cond:
+                    item = self._next_locked()
                 if item is None:
-                    self._expire_heartbeats_locked()
-                    item = self._next_locked(worker_id)
-                if item is None:
-                    if self._closed and not self._pending:
-                        return
-                    self._cond.wait(_IDLE_TICK)
-                    continue
-            if item.key in self._results:
-                with self._lock:  # bucket completed after we leased: release
-                    self._running.pop(f"{item.key}#{item.attempts}", None)
-                    self._drain_deferred_locked(item.key)
-                continue
-            try:
-                value = item.fn()
-            except Exception as e:  # noqa: BLE001 — retry path
-                self._fail(item, e)
-            else:
-                self._settle(item, value)
+                    break
+                lease = Lease(
+                    key=item.key, attempt=item.attempts, fn=item.fn,
+                    spec=item.spec,
+                )
+                if backend.offer(lease):
+                    self.dispatch_counts[self.backend_name] = (
+                        self.dispatch_counts.get(self.backend_name, 0) + 1
+                    )
+                    free -= 1
+                else:  # a slot vanished since the snapshot (worker death)
+                    with self._cond:
+                        self._unlease_locked(item)
+                    break
+            with self._cond:
+                if (
+                    self._state == _CLOSING
+                    and not self._pending
+                    and not self._running
+                    and not self._queue
+                ):
+                    return
 
     # ------------------------------------------------------------------
     # One-shot batch mode (the pre-streaming API, kept verbatim)

@@ -43,6 +43,7 @@ import io
 import json
 import os
 import pathlib
+import pickle
 import struct
 import tempfile
 import threading
@@ -78,11 +79,33 @@ def stable_key(key: Any) -> str:
 
 
 def _serialise(v: Any) -> bytes:
+    """npz for array payloads (dicts of str→array, arrays); a pickle
+    fallback — stored as a uint8 array under ``__pickled__`` so the entry
+    stays a plain npz archive — for everything else. The fallback is what
+    lets RPC worker results (arbitrary Python values, dicts keyed by int
+    run_id) cross the store **bit-exactly**: coercing a Python int through
+    ``np.asarray`` would silently wrap at 64 bits, which the conformance
+    suite's collision-sensitive integer workloads would detect."""
+    def _is_array(x: Any) -> bool:
+        # genuinely array-like only (ndarray / jnp / np scalar): coercing a
+        # Python scalar through np.asarray would change its type (and wrap
+        # a large int), breaking the bit-exact round-trip contract
+        return isinstance(x, np.ndarray) or hasattr(x, "__array__")
+
     buf = io.BytesIO()
-    if isinstance(v, dict):
-        np.savez(buf, **{kk: np.asarray(vv) for kk, vv in v.items()})
-    else:
-        np.savez(buf, __value__=np.asarray(v))
+    if isinstance(v, dict) and v and all(isinstance(k, str) for k in v):
+        if all(_is_array(vv) for vv in v.values()):
+            arrs = {kk: np.asarray(vv) for kk, vv in v.items()}
+            if not any(a.dtype.hasobject for a in arrs.values()):
+                np.savez(buf, **arrs)
+                return buf.getvalue()
+    elif _is_array(v):
+        a = np.asarray(v)
+        if not a.dtype.hasobject:
+            np.savez(buf, __value__=a)
+            return buf.getvalue()
+    blob = pickle.dumps(v, protocol=pickle.HIGHEST_PROTOCOL)
+    np.savez(buf, __pickled__=np.frombuffer(blob, dtype=np.uint8))
     return buf.getvalue()
 
 
@@ -309,6 +332,8 @@ class HierarchicalStore:
                 payload = data  # legacy entry: parse failure == corrupt
             try:
                 with np.load(io.BytesIO(payload)) as z:
+                    if "__pickled__" in z:
+                        return "ok", pickle.loads(z["__pickled__"].tobytes())
                     if "__value__" in z:
                         return "ok", z["__value__"]
                     return "ok", {k: z[k] for k in z.files}
@@ -356,15 +381,18 @@ class HierarchicalStore:
         if value is not None:
             self._write_disk(key, value)
 
-    def persist_all(self) -> None:
+    def persist_all(self) -> int:
         """Write every RAM-resident object to the disk tier (durability
         barrier: after this, a store re-opened on the directory resolves
         everything this one holds). The writes run outside the store lock —
-        they are fsync-heavy and, for SharedStore, flocked."""
+        they are fsync-heavy and, for SharedStore, flocked. Returns the
+        number of entries written through (for SharedStore an entry a peer
+        already committed counts too: it is durable either way)."""
         with self._lock:
             snapshot = list(self._ram.items())
         for k, v in snapshot:
             self._write_disk(k, v)
+        return len(snapshot)
 
     def contains(self, key: str) -> bool:
         with self._lock:

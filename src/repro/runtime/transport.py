@@ -1,0 +1,871 @@
+"""Transport-agnostic Worker backends — the Manager's dispatch boundary
+(DESIGN.md §13).
+
+The Manager is a pure scheduler/bookkeeper: it owns the queue, the lease
+table, retry/backup/heartbeat policy and result memoisation, and talks to
+its Workers exclusively through the :class:`WorkerBackend` protocol::
+
+    start(n) / offer(lease) / poll_completions(timeout) / heartbeat_view()
+    / shutdown()
+
+with :class:`Lease` / :class:`Completion` dataclasses as the only currency.
+Everything the paper's multi-node deployment needs from the boundary is in
+those five calls: demand signalling (``heartbeat_view`` exposes free
+slots), at-least-once dispatch (``offer`` may be re-driven after an
+expiry), and completion delivery decoupled from scheduling. Two conforming
+implementations ship here:
+
+* :class:`ThreadBackend` — the historical behavior: Worker threads in this
+  process executing ``Lease.fn`` closures directly. The default, so every
+  existing ``Manager()`` caller keeps working unchanged.
+* :class:`ProcessRpcBackend` — N ``spawn`` worker *processes* running
+  :func:`_rpc_worker_main`, speaking a length-prefixed pickle control plane
+  over ``multiprocessing.Connection`` pipes. Control messages carry only
+  keys, attempt numbers and small picklable task *specs*; task **results
+  never cross the wire** — workers commit them to a shared
+  :class:`~repro.runtime.storage.SharedStore` directory and the completion
+  message carries the store key (the results-by-store-reference rule).
+  Worker processes rebuild their execution context (workflow, inputs) from
+  a spawn-picklable ``build`` callable — the same pattern the fleet runner
+  uses — and rebuild each StudyPlan deterministically from the plan's
+  ``recipe``, so no unpicklable closure ever needs to cross a process
+  boundary.
+
+The frame format is deliberately transport-portable: ``<8-byte LE length>
+<pickle payload>`` — ``multiprocessing.Connection`` adds its own framing
+today, but the explicit prefix means the same codec drives a raw socket
+when workers move to other hosts (the ROADMAP follow-on).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import pickle
+import queue
+import struct
+import threading
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+__all__ = [
+    "Lease",
+    "Completion",
+    "WorkerStatus",
+    "WorkerBackend",
+    "ThreadBackend",
+    "ProcessRpcBackend",
+    "RemoteTaskError",
+    "TransportError",
+    "make_backend",
+]
+
+
+class TransportError(RuntimeError):
+    """A structural failure of the dispatch boundary itself (torn frame,
+    spec missing for a cross-process lease) — distinct from a task failing."""
+
+
+class RemoteTaskError(RuntimeError):
+    """A task failed on the far side of the boundary; carries the remote
+    traceback text (the original exception object cannot cross the wire)."""
+
+
+@dataclasses.dataclass
+class Lease:
+    """One attempt of one key, handed to a backend for execution.
+
+    ``fn`` is the in-process closure (never serialised; ignored by remote
+    backends); ``spec`` is the small picklable task description remote
+    backends ship instead. A backend consumes whichever representation it
+    supports — :class:`ThreadBackend` prefers ``fn``, falling back to the
+    portable ``("call", callable, args, kwargs)`` spec form so one WorkItem
+    can conform on every backend.
+    """
+
+    key: str
+    attempt: int
+    fn: Optional[Callable[[], Any]] = None
+    spec: Optional[Tuple] = None
+
+    @property
+    def lease_id(self) -> str:
+        return f"{self.key}#{self.attempt}"
+
+
+@dataclasses.dataclass
+class Completion:
+    """Terminal report of one lease: a value (hydrated by the backend —
+    possibly from the shared store) or a failure. ``exc`` carries the
+    original exception object for in-process backends; remote backends can
+    only ship ``error`` text, which the Manager wraps in
+    :class:`RemoteTaskError`."""
+
+    key: str
+    attempt: int
+    ok: bool
+    value: Any = None
+    exc: Optional[BaseException] = None
+    error: Optional[str] = None
+    store_key: Optional[str] = None
+    worker_id: int = -1
+    duration: float = 0.0
+
+    @property
+    def lease_id(self) -> str:
+        return f"{self.key}#{self.attempt}"
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerStatus:
+    """One worker's row in ``heartbeat_view()``: liveness, the monotonic
+    timestamp of its last sign of life, and the lease ids it currently
+    holds. A dead worker keeps reporting its orphaned leases so the Manager
+    can re-enqueue them (idempotently — it pops each from its lease table
+    exactly once)."""
+
+    alive: bool
+    last_seen: float
+    inflight: Tuple[str, ...] = ()
+
+
+try:  # Protocol is typing-only; keep the module importable everywhere
+    from typing import Protocol, runtime_checkable
+
+    @runtime_checkable
+    class WorkerBackend(Protocol):
+        """The Manager↔Worker contract. Implementations own worker
+        lifecycle and execution; the Manager owns every scheduling
+        decision.
+
+        Beyond the five methods, two class flags complete the contract:
+        ``supports_specs`` (True ⇒ leases are shipped by picklable spec,
+        closures never cross — the executor then also requires an
+        ``install_study(**study)`` method to broadcast plan recipes before
+        any bucket lease references them) and
+        ``heartbeats_prove_liveness`` (True ⇒ a fresh ``last_seen`` proves
+        a worker's leases live mid-task, sparing them age-based expiry).
+        """
+
+        name: str
+        supports_specs: bool
+        heartbeats_prove_liveness: bool
+
+        def start(self, n_workers: int) -> None:
+            """Bring up the worker pool (idempotent per session; a backend
+            may be restarted after ``shutdown``)."""
+
+        def offer(self, lease: Lease) -> bool:
+            """Hand a lease to a free worker. Returns False when no worker
+            can take it right now (the Manager re-queues the item)."""
+
+        def poll_completions(self, timeout: float) -> List["Completion"]:
+            """Block up to ``timeout`` seconds for completions; drain and
+            return everything available (possibly empty)."""
+
+        def heartbeat_view(self) -> Dict[int, WorkerStatus]:
+            """Per-worker liveness + inflight leases; the basis of the
+            Manager's demand, straggler and dead-worker decisions."""
+
+        def shutdown(self) -> None:
+            """Retire the pool; outstanding leases may be abandoned."""
+
+except ImportError:  # pragma: no cover - pre-3.8 fallback
+    WorkerBackend = object  # type: ignore[misc,assignment]
+
+
+def run_call_spec(spec: Tuple) -> Any:
+    """Execute the portable ``("call", fn, args, kwargs)`` spec form — the
+    backend-independent task representation the conformance suite drives
+    both backends with."""
+    kind = spec[0]
+    if kind != "call":
+        raise TransportError(f"unsupported lease spec {kind!r} for direct call")
+    _, fn, args, kwargs = spec
+    return fn(*args, **(kwargs or {}))
+
+
+def make_backend(spec: Any) -> "WorkerBackend":
+    """Resolve a backend spec: ``None``/``"thread"`` → a fresh
+    :class:`ThreadBackend`; a :class:`WorkerBackend` instance passes
+    through; a zero-arg callable is invoked (factory form). ``"process"``
+    cannot be built here — a :class:`ProcessRpcBackend` needs a ``build``
+    for its workers, so the caller must construct it."""
+    if spec is None or spec == "thread":
+        return ThreadBackend()
+    if isinstance(spec, str):
+        raise ValueError(
+            f"backend spec {spec!r} is not constructible from a name alone; "
+            "pass a ProcessRpcBackend(build=...) instance for process workers"
+        )
+    if callable(spec) and not hasattr(spec, "offer"):
+        return spec()
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# ThreadBackend — the historical in-process Worker pool, behind the API
+# ---------------------------------------------------------------------------
+
+_STOP = object()
+
+
+class ThreadBackend:
+    """Worker threads in this process. Leases execute their ``fn`` closure
+    (or the portable ``("call", ...)`` spec when no closure is attached);
+    values stay on the heap — nothing is serialised. One slot per worker:
+    the Manager sees demand as workers with an empty inflight tuple."""
+
+    name = "thread"
+    supports_specs = False
+    # a thread cannot sign life while inside a task fn, so its heartbeats
+    # prove nothing mid-task — the Manager keeps age-based expiry
+    heartbeats_prove_liveness = False
+
+    def __init__(self) -> None:
+        self._threads: List[threading.Thread] = []
+        self._inboxes: List["queue.Queue"] = []
+        self._inflight: List[set] = []
+        self._completions: "queue.Queue[Completion]" = queue.Queue()
+        self._lock = threading.Lock()
+
+    def start(self, n_workers: int) -> None:
+        if self._threads:
+            raise RuntimeError("ThreadBackend already started")
+        n = max(1, n_workers)
+        self._completions = queue.Queue()
+        self._inboxes = [queue.Queue() for _ in range(n)]
+        self._inflight = [set() for _ in range(n)]
+        self._threads = [
+            threading.Thread(target=self._worker, args=(i,), daemon=True)
+            for i in range(n)
+        ]
+        for t in self._threads:
+            t.start()
+
+    def offer(self, lease: Lease) -> bool:
+        with self._lock:
+            for wid, t in enumerate(self._threads):
+                if t.is_alive() and not self._inflight[wid]:
+                    self._inflight[wid].add(lease.lease_id)
+                    break
+            else:
+                return False
+        self._inboxes[wid].put(lease)
+        return True
+
+    def poll_completions(self, timeout: float) -> List[Completion]:
+        out: List[Completion] = []
+        try:
+            out.append(self._completions.get(timeout=max(0.0, timeout)))
+        except queue.Empty:
+            return out
+        while True:
+            try:
+                out.append(self._completions.get_nowait())
+            except queue.Empty:
+                return out
+
+    def heartbeat_view(self) -> Dict[int, WorkerStatus]:
+        now = time.monotonic()
+        with self._lock:
+            return {
+                wid: WorkerStatus(
+                    alive=t.is_alive(),
+                    last_seen=now,
+                    inflight=tuple(self._inflight[wid]),
+                )
+                for wid, t in enumerate(self._threads)
+            }
+
+    def shutdown(self) -> None:
+        for inbox in self._inboxes:
+            inbox.put(_STOP)
+        for t in self._threads:
+            t.join()
+        self._threads = []
+        self._inboxes = []
+        self._inflight = []
+
+    def _worker(self, wid: int) -> None:
+        inbox = self._inboxes[wid]
+        while True:
+            lease = inbox.get()
+            if lease is _STOP:
+                return
+            t0 = time.monotonic()
+            try:
+                if lease.fn is not None:
+                    value = lease.fn()
+                else:
+                    value = run_call_spec(lease.spec)
+            except Exception as e:  # noqa: BLE001 — the Manager owns retry
+                comp = Completion(
+                    key=lease.key, attempt=lease.attempt, ok=False, exc=e,
+                    error=repr(e), worker_id=wid,
+                    duration=time.monotonic() - t0,
+                )
+            else:
+                comp = Completion(
+                    key=lease.key, attempt=lease.attempt, ok=True, value=value,
+                    worker_id=wid, duration=time.monotonic() - t0,
+                )
+            with self._lock:
+                self._inflight[wid].discard(lease.lease_id)
+            self._completions.put(comp)
+
+
+# ---------------------------------------------------------------------------
+# Wire codec: length-prefixed pickle frames
+# ---------------------------------------------------------------------------
+
+_FRAME_HEADER = struct.Struct("<Q")
+
+
+def _send_frame(conn, lock: threading.Lock, obj: Any) -> None:
+    payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    frame = _FRAME_HEADER.pack(len(payload)) + payload
+    with lock:
+        conn.send_bytes(frame)
+
+
+def _recv_frame(conn) -> Any:
+    frame = conn.recv_bytes()
+    if len(frame) < _FRAME_HEADER.size:
+        raise TransportError("short frame")
+    (length,) = _FRAME_HEADER.unpack(frame[: _FRAME_HEADER.size])
+    if length != len(frame) - _FRAME_HEADER.size:
+        raise TransportError(
+            f"torn frame: header says {length}, got {len(frame) - _FRAME_HEADER.size}"
+        )
+    return pickle.loads(frame[_FRAME_HEADER.size:])
+
+
+def _result_store_key(session: str, work_key: str, plan_id: Optional[str] = None) -> str:
+    """Store key a worker commits a lease's result under. Keyed by the WORK
+    key, not the lease id: racing attempts of one key compute the same pure
+    value, so the SharedStore's per-key lock elides the double-write — but
+    scoped by the backend **session nonce** (and, for bucket leases, the
+    plan id) so a restarted backend or a second plan sharing one session
+    can never be served a previous lifetime's entry as if it were its own.
+    (Cross-round/cross-worker reuse does not live here: it flows through
+    the workers' task-level ResultCache keys, which are deliberately
+    session-independent.)"""
+    if plan_id is not None:
+        return f"rpc:{session}:{plan_id}:{work_key}"
+    return f"rpc:{session}:{work_key}"
+
+
+# ---------------------------------------------------------------------------
+# The worker process main loop
+# ---------------------------------------------------------------------------
+
+
+def _rpc_worker_main(
+    conn,
+    worker_id: int,
+    session: str,
+    build: Optional[Callable[..., Dict[str, Any]]],
+    build_kwargs: Optional[Dict[str, Any]],
+    store_dir: str,
+    store_ram_bytes: int,
+    cache_bytes: int,
+    heartbeat_interval: float,
+) -> None:
+    """Entry point of one spawn worker: build the execution context, mount
+    the SharedStore, then serve leases until told to stop. A failing
+    ``build`` is parked and surfaced as a failure on every lease (the
+    fleet-runner pattern: a raising child would just die silently).
+
+    A daemon heartbeat thread keeps signing life even while a task runs, so
+    the leader can tell "busy on a long bucket" from "dead" — something the
+    in-process thread backend structurally cannot."""
+    from repro.runtime.storage import SharedStore
+
+    send_lock = threading.Lock()
+    ctx: Dict[str, Any] = {}
+    ctx_error: Optional[str] = None
+    store = None
+    cache = None
+    try:
+        spec = build(**(build_kwargs or {})) if build is not None else {}
+        store = SharedStore(
+            store_ram_bytes, disk_dir=store_dir, writer_id=f"rpcw{worker_id}"
+        )
+        from repro.engine.executor import ResultCache
+
+        cache = ResultCache(cache_bytes, spill_store=store)
+        ctx = {
+            "workflow": spec.get("workflow"),
+            "inputs": list(spec.get("inputs") or ()),
+            # StudyPlans rebuilt from recipes, keyed by plan_id (bounded)
+            "plans": collections.OrderedDict(),
+        }
+    except BaseException:  # noqa: BLE001 — park and report per-lease
+        ctx_error = traceback.format_exc()
+
+    stop = threading.Event()
+
+    def _heartbeats() -> None:
+        while not stop.wait(heartbeat_interval):
+            try:
+                _send_frame(conn, send_lock, {"t": "hb", "wid": worker_id})
+            except (OSError, ValueError, BrokenPipeError):
+                return
+
+    threading.Thread(target=_heartbeats, daemon=True).start()
+    try:
+        _send_frame(conn, send_lock, {"t": "hello", "wid": worker_id, "pid": os.getpid()})
+        while True:
+            try:
+                msg = _recv_frame(conn)
+            except (EOFError, OSError):
+                break
+            kind = msg.get("t")
+            if kind == "stop":
+                break
+            if kind == "study":
+                if ctx_error is None:
+                    try:
+                        # publish point: push the previous study's cached
+                        # task outputs through to the store's disk tier so
+                        # peers — and a resumed study over this store_dir —
+                        # rehydrate instead of recomputing (the fleet
+                        # workers' per-round flush, same rule)
+                        if cache is not None:
+                            cache.flush()
+                        _install_study(ctx, msg)
+                    except BaseException:  # noqa: BLE001
+                        ctx_error = traceback.format_exc()
+                continue
+            if kind != "lease":
+                continue
+            t0 = time.monotonic()
+            if ctx_error is not None:
+                reply = {
+                    "t": "comp", "wid": worker_id, "key": msg["key"],
+                    "attempt": msg["attempt"], "ok": False,
+                    "error": f"worker context failed to build:\n{ctx_error}",
+                }
+            else:
+                try:
+                    store_key, meta = _execute_lease_spec(
+                        ctx, store, cache, session, msg["key"], msg["spec"]
+                    )
+                    reply = {
+                        "t": "comp", "wid": worker_id, "key": msg["key"],
+                        "attempt": msg["attempt"], "ok": True,
+                        "store_key": store_key,
+                        "duration": time.monotonic() - t0, **meta,
+                    }
+                except BaseException:  # noqa: BLE001 — report, don't die
+                    reply = {
+                        "t": "comp", "wid": worker_id, "key": msg["key"],
+                        "attempt": msg["attempt"], "ok": False,
+                        "error": traceback.format_exc(),
+                        "duration": time.monotonic() - t0,
+                    }
+            try:
+                _send_frame(conn, send_lock, reply)
+            except (OSError, ValueError, BrokenPipeError):
+                break
+    finally:
+        stop.set()
+        try:
+            # durability barrier at session end: without it every cached
+            # task output this worker never evicted would die with the
+            # process, silently voiding zero-recompute resume
+            if cache is not None:
+                cache.flush()
+        except BaseException:  # noqa: BLE001 — shutdown must not hang/raise
+            pass
+        try:
+            conn.close()
+        except OSError:
+            pass
+
+
+def _install_study(ctx: Dict[str, Any], msg: Dict[str, Any]) -> None:
+    """Rebuild a StudyPlan from its recipe against this worker's workflow.
+    Planning is deterministic (sorted group keys, no RNG), so every worker
+    and the leader hold structurally identical plans — which is what lets a
+    lease name a bucket by ``(plan_id, input, stage, bucket)`` alone."""
+    from repro.engine.planner import plan_study
+    from repro.engine.types import MemoryBudget
+
+    wf = ctx.get("workflow")
+    if wf is None:
+        raise TransportError(
+            "lease needs a workflow but the backend's build() returned none"
+        )
+    recipe = msg["recipe"]
+    plan = plan_study(
+        wf,
+        recipe["param_sets"],
+        memory=MemoryBudget(
+            bytes=recipe["memory_bytes"], cache_bytes=recipe["cache_bytes"]
+        ),
+        policy=recipe["policy"],
+        max_bucket_size=recipe["max_bucket_size"],
+        active_paths=recipe["active_paths"],
+        workers=recipe["workers"],
+    )
+    plans = ctx["plans"]
+    plans[msg["plan_id"]] = {
+        "plan": plan,
+        "key_prefix": msg["key_prefix"],
+        "input_keys": list(msg["input_keys"]),
+        "cache_enabled": bool(msg["cache_enabled"]),
+    }
+    while len(plans) > 8:  # adaptive studies install one plan per round
+        plans.popitem(last=False)
+
+
+def _execute_lease_spec(
+    ctx: Dict[str, Any], store, cache, session: str, work_key: str, spec: Tuple
+) -> Tuple[str, Dict[str, Any]]:
+    """Run one lease spec and commit its result to the shared store's DISK
+    tier (peers and the leader resolve it by key — the only way a result
+    ever leaves this process). Returns ``(store_key, completion metadata)``.
+    """
+    kind = spec[0]
+    plan_scope: Optional[str] = None
+    if kind == "call":
+        value = run_call_spec(spec)
+        meta: Dict[str, Any] = {"wrap": "raw"}
+    elif kind == "bucket":
+        _, plan_id, input_idx, si, bi = spec
+        entry = ctx["plans"].get(plan_id)
+        if entry is None:
+            raise TransportError(f"unknown plan {plan_id!r} (study not installed)")
+        plan_scope = plan_id
+        plan = entry["plan"]
+        stage_plan = plan.stages[si]
+        bucket = stage_plan.buckets[bi]
+        prefix = entry["key_prefix"]
+        if si == 0:
+            src = ctx["inputs"][input_idx]
+        else:
+            prev = plan.stages[si - 1]
+            rid0 = bucket.run_ids[0]
+            bj = next(
+                j for j, b in enumerate(prev.buckets) if rid0 in set(b.run_ids)
+            )
+            up_key = _result_store_key(
+                session,
+                f"{prefix}in{input_idx}:{prev.index}:{prev.stage.name}:{bj}",
+                plan_id,
+            )
+            upstream = store.get(up_key)
+            if upstream is None:
+                raise TransportError(
+                    f"upstream result {up_key!r} not resolvable from the store"
+                )
+            src = upstream[rid0]
+        from repro.engine.executor import execute_bucket
+
+        ikey = entry["input_keys"][input_idx]
+        value, executed, hits = execute_bucket(
+            bucket,
+            src,
+            cache if entry["cache_enabled"] else None,
+            scope=("input", ikey) + bucket.cache_scope,
+        )
+        meta = {"wrap": "bucket", "executed": executed, "hits": hits}
+    else:
+        raise TransportError(f"unknown lease spec kind {kind!r}")
+    if value is None:
+        # a legitimate None result: the store cannot represent it (a get
+        # returning None means "missing"), so it rides the completion as an
+        # explicit marker instead of a store key — still no payload bytes
+        # on the wire
+        meta["none"] = True
+        return None, meta
+    store_key = _result_store_key(session, work_key, plan_scope)
+    store.put(store_key, value)
+    store.persist(store_key)  # must reach disk BEFORE the completion is sent
+    return store_key, meta
+
+
+# ---------------------------------------------------------------------------
+# ProcessRpcBackend — spawn workers behind the pickle control plane
+# ---------------------------------------------------------------------------
+
+
+class _WorkerHandle:
+    __slots__ = ("wid", "proc", "conn", "alive", "last_seen", "inflight", "pid")
+
+    def __init__(self, wid, proc, conn):
+        self.wid = wid
+        self.proc = proc
+        self.conn = conn
+        self.alive = True
+        self.last_seen = time.monotonic()
+        self.inflight: Dict[str, Lease] = {}
+        self.pid: Optional[int] = None
+
+
+class ProcessRpcBackend:
+    """N ``spawn`` worker processes serving leases over a length-prefixed
+    pickle control plane; results cross the boundary only as
+    :class:`~repro.runtime.SharedStore` keys (see the module docstring).
+
+    ``build`` is a spawn-picklable callable (module-level; kwargs picklable)
+    returning ``{"workflow": ..., "inputs": [...]}`` — each worker calls it
+    once to construct its own process-local execution context, exactly like
+    the fleet runner's ``build``. Backends that only serve portable
+    ``("call", fn, args, kwargs)`` specs may pass ``build=None``.
+    """
+
+    name = "process"
+    supports_specs = True
+    # workers heartbeat from a side thread even mid-task, so a fresh
+    # heartbeat PROVES the lease live: the Manager spares such leases from
+    # age-based expiry (long buckets get backup clones, not revocations)
+    heartbeats_prove_liveness = True
+
+    def __init__(
+        self,
+        build: Optional[Callable[..., Dict[str, Any]]] = None,
+        build_kwargs: Optional[Dict[str, Any]] = None,
+        *,
+        store_dir: Optional[str] = None,
+        store_ram_bytes: int = 256 << 20,
+        cache_bytes: Optional[int] = None,
+        mp_context: str = "spawn",
+        heartbeat_interval: float = 0.25,
+    ) -> None:
+        from repro.engine.types import DEFAULT_CACHE_BYTES
+
+        self.build = build
+        self.build_kwargs = dict(build_kwargs or {})
+        self._owns_store_dir = store_dir is None
+        if store_dir is None:
+            import tempfile
+
+            store_dir = tempfile.mkdtemp(prefix="rtf_rpc_")
+        self.store_dir = store_dir
+        self.store_ram_bytes = int(store_ram_bytes)
+        self.cache_bytes = int(cache_bytes or DEFAULT_CACHE_BYTES)
+        self.mp_context = mp_context
+        self.heartbeat_interval = float(heartbeat_interval)
+        self._handles: List[_WorkerHandle] = []
+        self._studies: List[Dict[str, Any]] = []  # replayed on (re)start
+        self._store = None  # leader-side mount, lazy
+        self._lock = threading.Lock()
+        # Session nonce scoping every result store key: minted per start(),
+        # so a restarted backend (or another leader over one store_dir) can
+        # never read a previous lifetime's result as its own.
+        self._session = ""
+
+    # -- leader-side store mount (result hydration) ---------------------
+    @property
+    def store(self):
+        if self._store is None:
+            from repro.runtime.storage import SharedStore
+
+            self._store = SharedStore(
+                self.store_ram_bytes, disk_dir=self.store_dir, writer_id="rpc-leader"
+            )
+        return self._store
+
+    def worker_pids(self) -> List[Optional[int]]:
+        """Spawned worker process ids (test/ops hook — e.g. fault injection
+        by SIGKILL)."""
+        return [h.proc.pid for h in self._handles]
+
+    # -- WorkerBackend protocol -----------------------------------------
+    def start(self, n_workers: int) -> None:
+        if self._handles:
+            raise RuntimeError("ProcessRpcBackend already started")
+        import multiprocessing
+        import uuid
+
+        self._session = uuid.uuid4().hex[:12]
+        mp = multiprocessing.get_context(self.mp_context)
+        handles = []
+        for wid in range(max(1, n_workers)):
+            parent, child = mp.Pipe(duplex=True)
+            proc = mp.Process(
+                target=_rpc_worker_main,
+                args=(
+                    child, wid, self._session, self.build, self.build_kwargs,
+                    self.store_dir, self.store_ram_bytes, self.cache_bytes,
+                    self.heartbeat_interval,
+                ),
+                daemon=True,
+            )
+            proc.start()
+            child.close()
+            handles.append(_WorkerHandle(wid, proc, parent))
+        self._handles = handles
+        for study in self._studies:  # restart: re-install session context
+            self._broadcast({"t": "study", **study})
+
+    def install_study(self, **study: Any) -> None:
+        """Broadcast a study context (plan recipe + key prefix + input keys)
+        to every worker; pipes are ordered, so any lease sent afterwards
+        finds the plan installed."""
+        self._studies.append(dict(study))
+        if len(self._studies) > 8:
+            self._studies = self._studies[-8:]
+        self._broadcast({"t": "study", **study})
+
+    def _broadcast(self, msg: Dict[str, Any]) -> None:
+        for h in self._handles:
+            if not h.alive:
+                continue
+            try:
+                _send_frame(h.conn, self._lock, msg)
+            except (OSError, ValueError, BrokenPipeError):
+                h.alive = False
+
+    def offer(self, lease: Lease) -> bool:
+        if lease.spec is None:
+            raise TransportError(
+                f"lease {lease.key!r} has no picklable spec: the process "
+                "backend cannot ship closures across the boundary"
+            )
+        target = None
+        for h in self._handles:
+            if h.alive and h.proc.is_alive() and not h.inflight:
+                target = h
+                break
+        if target is None:
+            return False
+        try:
+            _send_frame(
+                target.conn, self._lock,
+                {"t": "lease", "key": lease.key, "attempt": lease.attempt,
+                 "spec": lease.spec},
+            )
+        except (OSError, ValueError, BrokenPipeError):
+            target.alive = False
+            return False
+        target.inflight[lease.lease_id] = lease
+        return True
+
+    def poll_completions(self, timeout: float) -> List[Completion]:
+        import multiprocessing.connection as mpc
+
+        live = [h for h in self._handles if h.alive]
+        if not live:
+            time.sleep(min(max(timeout, 0.0), 0.05))
+            return []
+        ready = mpc.wait([h.conn for h in live], timeout=max(0.0, timeout))
+        by_conn = {h.conn: h for h in live}
+        out: List[Completion] = []
+        for conn in ready:
+            h = by_conn[conn]
+            try:
+                while True:
+                    msg = _recv_frame(conn)
+                    h.last_seen = time.monotonic()
+                    if msg.get("t") == "comp":
+                        out.append(self._hydrate(h, msg))
+                    elif msg.get("t") == "hello":
+                        h.pid = msg.get("pid")
+                    if not conn.poll():
+                        break
+            except (EOFError, OSError):
+                h.alive = False
+        return out
+
+    def _hydrate(self, h: _WorkerHandle, msg: Dict[str, Any]) -> Completion:
+        """Turn a wire completion into a Manager-facing one: resolve the
+        result by its store key (the only representation that crossed the
+        boundary) and re-wrap bucket results into the executor's
+        ``(outputs, executed, hits)`` shape."""
+        h.inflight.pop(f"{msg['key']}#{msg['attempt']}", None)
+        if not msg.get("ok"):
+            return Completion(
+                key=msg["key"], attempt=msg["attempt"], ok=False,
+                error=msg.get("error") or "remote task failed",
+                worker_id=h.wid, duration=float(msg.get("duration", 0.0)),
+            )
+        if msg.get("none"):  # an explicit None result (never stored)
+            return Completion(
+                key=msg["key"], attempt=msg["attempt"], ok=True, value=None,
+                worker_id=h.wid, duration=float(msg.get("duration", 0.0)),
+            )
+        value = self.store.get(msg["store_key"])
+        if value is None:
+            return Completion(
+                key=msg["key"], attempt=msg["attempt"], ok=False,
+                error=f"result {msg['store_key']!r} missing from the store",
+                worker_id=h.wid, duration=float(msg.get("duration", 0.0)),
+            )
+        if msg.get("wrap") == "bucket":
+            value = (value, int(msg["executed"]), int(msg["hits"]))
+        return Completion(
+            key=msg["key"], attempt=msg["attempt"], ok=True, value=value,
+            store_key=msg["store_key"], worker_id=h.wid,
+            duration=float(msg.get("duration", 0.0)),
+        )
+
+    def heartbeat_view(self) -> Dict[int, WorkerStatus]:
+        view = {}
+        for h in self._handles:
+            alive = h.alive and h.proc.is_alive()
+            if not alive:
+                h.alive = False
+            view[h.wid] = WorkerStatus(
+                alive=alive, last_seen=h.last_seen, inflight=tuple(h.inflight)
+            )
+        return view
+
+    def shutdown(self) -> None:
+        for h in self._handles:
+            if h.alive:
+                try:
+                    _send_frame(h.conn, self._lock, {"t": "stop"})
+                except (OSError, ValueError, BrokenPipeError):
+                    pass
+        deadline = time.monotonic() + 5.0
+        for h in self._handles:
+            h.proc.join(timeout=max(0.0, deadline - time.monotonic()))
+            if h.proc.is_alive():
+                h.proc.terminate()
+                h.proc.join(timeout=2.0)
+            try:
+                h.conn.close()
+            except OSError:
+                pass
+        self._handles = []
+        self._purge_session_entries()
+
+    def _purge_session_entries(self) -> None:
+        """Best-effort removal of THIS session's ``rpc:<session>:…`` result
+        entries from the store. They are transient transport payloads — the
+        session nonce makes them unreachable to any future session, so on a
+        caller-owned persistent ``store_dir`` (an adaptive study's reuse
+        pool) they would otherwise accumulate as dead weight forever. The
+        durable cross-round reuse pool (the workers' task-level cache keys)
+        is untouched. Entries a kill orphans are leaked until the directory
+        is retired — the manifest still records them for audit."""
+        if not self._session:
+            return
+        prefix = f"rpc:{self._session}:"
+        try:
+            for key in self.store.committed_keys():
+                if key.startswith(prefix):
+                    self.store.delete(key)
+        except OSError:  # pragma: no cover - purge is best-effort
+            pass
+
+    def cleanup(self) -> None:
+        """Remove the backend's store directory IF this backend created it
+        (default tempdir mode) and no workers are running. ``shutdown``
+        deliberately leaves the store readable — callers often inspect
+        committed results after a session retires — so owners of throwaway
+        backends (the app-level ``backend="process"`` paths call this) must
+        cleanup explicitly; a caller-supplied ``store_dir`` is never
+        touched (it is the caller's reuse pool)."""
+        if not self._owns_store_dir or self._handles:
+            return
+        import shutil
+
+        self._store = None
+        shutil.rmtree(self.store_dir, ignore_errors=True)

@@ -87,6 +87,7 @@ class StudyDriver:
         n_boot: int = 32,
         input_keys: Optional[Sequence[Any]] = None,
         store_dir: Optional[str] = None,
+        backend: Any = None,
         evaluate_delta: Optional[
             Callable[
                 [Sequence[ParamSet]],
@@ -119,6 +120,11 @@ class StudyDriver:
             "refine": RefinementSampler(),
         }
         self.n_boot = n_boot
+        # WorkerBackend spec for the study's persistent Manager session:
+        # None/"thread" (in-process Workers) or a constructed
+        # ProcessRpcBackend whose build() produces this study's workflow
+        # and inputs in each worker process (DESIGN.md §13).
+        self.backend = backend
         # Optional out-of-process evaluation hook (the fleet runner): given
         # the round's delta, returns (ParamSet -> objective, counter stats).
         # The hook owns planning/execution/state-merge; the driver keeps the
@@ -144,6 +150,7 @@ class StudyDriver:
         st = self.state
         if st.manager is None or not st.manager.is_running:
             st.manager = Manager(
+                backend=self.backend,
                 max_attempts=self.cluster.max_attempts,
                 heartbeat_timeout=self.cluster.heartbeat_timeout,
                 straggler_factor=self.cluster.straggler_factor,
@@ -375,11 +382,19 @@ class StudyDriver:
     # ------------------------------------------------------------------
     def summary(self) -> Dict[str, Any]:
         st = self.state
+        if st.manager is not None:
+            backend_name = st.manager.backend_name
+            dispatch = dict(st.manager.dispatch_counts)
+        else:  # fleet leader (evaluate_delta hook) or nothing evaluated yet
+            backend_name = None
+            dispatch = {}
         return {
             **st.counters(),
             "active": list(st.active),
             "frozen": dict(st.frozen),
             "phase": st.phase,
+            "backend": backend_name,
+            "dispatch_counts": dispatch,
             "best": None if st.best is None else {"params": dict(st.best[0]), "objective": st.best[1]},
         }
 
@@ -430,6 +445,7 @@ def _fleet_worker_init(
     engine_policy: str,
     cluster: Optional[ClusterSpec],
     cache_bytes: Optional[int],
+    worker_backend: Any = None,
 ) -> None:
     """Pool initializer (runs once per spawned worker): build the workflow
     in-process, mount the SharedStore, and keep one StudyDriver — with its
@@ -459,6 +475,9 @@ def _fleet_worker_init(
             engine_policy=engine_policy,
             cluster=cluster,
             input_keys=spec.get("input_keys"),
+            # the fleet's execution path flows through the same
+            # WorkerBackend API as every other Manager session
+            backend=worker_backend,
         )
     except BaseException as e:  # noqa: BLE001
         _FLEET_WORKER["init_error"] = e
@@ -482,7 +501,7 @@ def _fleet_worker_eval(args: Tuple[List[Any], List[str]]) -> Dict[str, Any]:
     # store counters are worker-lifetime; the leader sums per-shard deltas
     before = (st.store.corrupt, st.store.dedup_writes, st.store.disk_hits)
     y, stats = drv.evaluate(shard)
-    st.cache.flush()
+    stats["cache_flushed"] = st.cache.flush()
     return {
         "evaluated": [[_ps_to_json(ps), y_i] for ps, y_i in zip(shard, y)],
         # only the entries THIS shard added: the leader already holds the
@@ -512,6 +531,7 @@ def run_fleet_study(
     store_ram_bytes: int = 256 << 20,
     cache_bytes: Optional[int] = None,
     mp_context: str = "spawn",
+    worker_backend: Any = None,
 ) -> Tuple[StudyState, Dict[str, Any]]:
     """Run one adaptive study as a fleet of ``n_procs`` StudyDriver worker
     processes pooling a single :class:`~repro.runtime.SharedStore` on
@@ -525,6 +545,21 @@ def run_fleet_study(
     """
     if n_procs < 1:
         raise ValueError("run_fleet_study needs n_procs >= 1")
+    # worker_backend crosses the spawn boundary via Pool initargs, so it
+    # must be a picklable SPEC — None/"thread", or a module-level zero-arg
+    # factory returning a WorkerBackend. A constructed backend instance
+    # holds locks/pipes and cannot be shipped; reject it here instead of
+    # failing deep inside Pool creation.
+    if not (
+        worker_backend is None
+        or worker_backend == "thread"
+        or (callable(worker_backend) and not hasattr(worker_backend, "offer"))
+    ):
+        raise ValueError(
+            "worker_backend must be None, 'thread', or a spawn-picklable "
+            "factory callable returning a WorkerBackend; a constructed "
+            "backend instance cannot cross the fleet's spawn boundary"
+        )
     # the leader never evaluates (its evaluate_delta hook farms every delta
     # out), so a build that offers a ``leader`` flag may skip constructing
     # the objective's heavy parts (e.g. reference segmentations)
@@ -550,6 +585,9 @@ def run_fleet_study(
         "corrupt": 0,
         "dedup_writes": 0,
         "store_disk_hits": 0,
+        "cache_flushed": 0,  # entries the workers' publish flushes persisted
+        "worker_backend": worker_backend if isinstance(worker_backend, str)
+        else ("thread" if worker_backend is None else "factory"),
     }
     # `pool` is assigned below, after the driver is built — creating the
     # worker processes last means a bad driver argument cannot leak a
@@ -595,6 +633,7 @@ def run_fleet_study(
             fleet_stats["corrupt"] += int(p["corrupt"])
             fleet_stats["dedup_writes"] += int(p["dedup_writes"])
             fleet_stats["store_disk_hits"] += int(p["store_disk_hits"])
+            fleet_stats["cache_flushed"] += int(p["stats"].get("cache_flushed", 0))
         fleet_stats["shards_dispatched"] += len(shards)
         return y_by_ps, agg
 
@@ -625,6 +664,7 @@ def run_fleet_study(
             engine_policy,
             cluster,
             cache_bytes,
+            worker_backend,
         ),
     )
     try:

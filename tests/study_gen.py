@@ -10,9 +10,10 @@ not a tolerance miss. Bit-identical here means ``==`` on exact ints.
 
 from __future__ import annotations
 
+import functools
 import random
 import zlib
-from typing import Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Sequence, Tuple
 
 from repro.core import StageSpec, TaskSpec, Workflow
 
@@ -20,12 +21,13 @@ PRIME = (1 << 61) - 1
 _MULT = 1048573
 
 
-def _mix_fn(stage_idx: int, task_idx: int):
-    def fn(x: int, **kw) -> int:
-        tag = repr((stage_idx, task_idx, tuple(sorted(kw.items())))).encode()
-        return (x * _MULT + zlib.crc32(tag)) % PRIME
+def _mix_task(stage_idx: int, task_idx: int, x: int, **kw) -> int:
+    tag = repr((stage_idx, task_idx, tuple(sorted(kw.items())))).encode()
+    return (x * _MULT + zlib.crc32(tag)) % PRIME
 
-    return fn
+
+def _mix_fn(stage_idx: int, task_idx: int):
+    return functools.partial(_mix_task, stage_idx, task_idx)
 
 
 def random_workflow(
@@ -63,6 +65,83 @@ def random_workflow(
             )
         stages.append(StageSpec(name=f"stage{si}", tasks=tuple(tasks)))
     return Workflow(stages=tuple(stages)), names, cards
+
+
+# ---------------------------------------------------------------------------
+# Spawn-picklable form: a workflow described by a plain-data LAYOUT
+# ---------------------------------------------------------------------------
+#
+# ``_mix_task`` is module-level and task fns are ``functools.partial`` over
+# it, so a layout-built workflow survives pickling — which is what lets the
+# WorkerBackend conformance suite rebuild the *same* workflow inside spawn
+# worker processes (``mix_study_build`` is a ProcessRpcBackend ``build``).
+
+Layout = List[List[Tuple[str, Tuple[str, ...], float, int]]]
+
+
+def workflow_from_layout(layout: Layout) -> Workflow:
+    """Deterministically rebuild the workflow a layout describes; two
+    processes calling this with one layout hold structurally identical
+    workflows computing identical integers."""
+    stages = tuple(
+        StageSpec(
+            name=f"stage{si}",
+            tasks=tuple(
+                TaskSpec(
+                    name=name,
+                    param_names=tuple(pnames),
+                    fn=_mix_fn(si, ti),
+                    cost=cost,
+                    output_bytes=nbytes,
+                )
+                for ti, (name, pnames, cost, nbytes) in enumerate(tasks)
+            ),
+        )
+        for si, tasks in enumerate(layout)
+    )
+    return Workflow(stages=stages)
+
+
+def random_layout(
+    rng: random.Random,
+    *,
+    max_stages: int = 3,
+    max_tasks: int = 3,
+    max_card: int = 3,
+    max_bytes: int = 256,
+) -> Tuple[Layout, List[str], Dict[str, int]]:
+    """Random layout mirroring :func:`random_workflow`'s shape distribution
+    (same task/param structure; data-only, so it crosses a spawn boundary).
+    """
+    names: List[str] = []
+    cards: Dict[str, int] = {}
+    layout: Layout = []
+    for _si in range(rng.randint(1, max_stages)):
+        tasks = []
+        for ti in range(rng.randint(1, max_tasks)):
+            n_params = rng.choice([0, 1, 1, 2])
+            task_names = []
+            for _ in range(n_params):
+                nm = f"p{len(names)}"
+                names.append(nm)
+                cards[nm] = rng.randint(1, max_card)
+                task_names.append(nm)
+            tasks.append(
+                (
+                    f"s{len(layout)}t{ti}",
+                    tuple(task_names),
+                    rng.choice([0.5, 1.0, 2.0]),
+                    rng.choice([0, max_bytes // 4, max_bytes]),
+                )
+            )
+        layout.append(tasks)
+    return layout, names, cards
+
+
+def mix_study_build(layout: Layout, inputs: Sequence[Any]):
+    """ProcessRpcBackend ``build``: reconstruct the layout's workflow and
+    inputs inside a worker process."""
+    return {"workflow": workflow_from_layout(layout), "inputs": list(inputs)}
 
 
 def random_param_sets(
