@@ -19,7 +19,9 @@ Usage (README-level):
     # --backend process swaps the Manager's Worker pool for RPC worker
     # PROCESSES behind the same WorkerBackend API (DESIGN.md §13): spawn
     # workers rebuild the workflow+plan from picklable specs, and results
-    # cross the process boundary only as SharedStore keys.
+    # cross the process boundary only as SharedStore keys. Fast-path flags
+    # (DESIGN.md §14) ride the spec: --backend 'process[none]' replays the
+    # pre-fast-path wire, 'process[-shm]' drops one mechanism, etc.
 
     # Adaptive mode (DESIGN.md §11): a multi-round MOAT -> prune -> VBD ->
     # refine study driven by repro.study.StudyDriver — one persistent
@@ -153,11 +155,16 @@ def main() -> None:
                          "pooling one SharedStore")
     ap.add_argument("--store-dir", default=None,
                     help="SharedStore directory for --fleet (default: fresh tmpdir)")
-    ap.add_argument("--backend", choices=("thread", "process"), default="thread",
+    ap.add_argument("--backend", default="thread",
                     help="WorkerBackend for the study's Manager session: "
-                         "in-process Worker threads (default) or RPC worker "
-                         "processes with results pooled via a SharedStore")
+                         "'thread' (default, in-process Workers) or "
+                         "'process' — RPC worker processes pooling a "
+                         "SharedStore. Fast-path flags select per DESIGN.md "
+                         "§14, e.g. 'process[none]' or 'process[-shm]'")
     args = ap.parse_args()
+    if args.backend != "thread" and not args.backend.startswith("process"):
+        ap.error(f"--backend must be 'thread' or 'process[...]', "
+                 f"got {args.backend!r}")
 
     if args.fleet > 0:
         run_fleet(args)
@@ -183,12 +190,14 @@ def main() -> None:
     tiles_np = [synthetic_tile(args.size, args.size, seed=t) for t in range(args.tiles)]
     tiles = [{"raw": jnp.asarray(im)} for im in tiles_np]
     backend = None
-    if args.backend == "process":
+    if args.backend.startswith("process"):
         from repro.app.pipeline import pathology_rpc_build
         from repro.runtime import ProcessRpcBackend
+        from repro.runtime.transport import process_flag_kwargs
 
         backend = ProcessRpcBackend(
-            build=pathology_rpc_build, build_kwargs={"images": tiles_np}
+            build=pathology_rpc_build, build_kwargs={"images": tiles_np},
+            **process_flag_kwargs(args.backend),
         )
 
     # reference masks first: the 1-run reference plan, streamed over all

@@ -219,15 +219,19 @@ def _backend_for(
     store_dir: Optional[str] = None,
 ) -> Any:
     """Resolve the app-level ``backend`` spec: ``None``/``"thread"`` pass
-    through to the Manager's default; ``"process"`` builds a
+    through to the Manager's default; ``"process"`` — optionally with the
+    per-optimization flag suffix of DESIGN.md §14, e.g.
+    ``"process[-async]"`` or ``"process[none,batch,max_batch=4]"`` (see
+    :func:`repro.runtime.transport.process_flag_kwargs`) — builds a
     ProcessRpcBackend whose workers reconstruct this exact study via
     :func:`pathology_rpc_build`; a constructed WorkerBackend passes
     through untouched. ``store_dir`` mounts the workers' stores on a
     caller-owned directory (the adaptive study's persistent pool, so a
     resumed study still rehydrates the workers' task outputs); without it
     the backend owns a throwaway tempdir the caller must ``cleanup()``."""
-    if backend == "process":
+    if isinstance(backend, str) and backend.startswith("process"):
         from repro.runtime import ProcessRpcBackend
+        from repro.runtime.transport import process_flag_kwargs
 
         return ProcessRpcBackend(
             build=pathology_rpc_build,
@@ -236,6 +240,7 @@ def _backend_for(
                 "costs": costs,
             },
             store_dir=store_dir,
+            **process_flag_kwargs(backend),
         )
     return backend
 
@@ -243,7 +248,11 @@ def _backend_for(
 def _backend_cleanup(spec: Any, backend_obj: Any) -> None:
     """Release a backend `_backend_for` constructed (drop a throwaway
     tempdir store); caller-provided backends are untouched."""
-    if spec == "process" and hasattr(backend_obj, "cleanup"):
+    if (
+        isinstance(spec, str)
+        and spec.startswith("process")
+        and hasattr(backend_obj, "cleanup")
+    ):
         backend_obj.cleanup()
 
 

@@ -156,6 +156,19 @@ class ResultCache:
             self.spill_store.put(self._store_key(key), value)
         return self.spill_store.persist_all()
 
+    def counters(self) -> Dict[str, int]:
+        """Point-in-time counter snapshot — the cache half of the RPC
+        workers' warm-cache stats (heartbeats ship it; the backend's
+        ``stats()`` aggregates it across the pool)."""
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "spills": self.spills,
+                "rehydrations": self.rehydrations,
+                "entries": len(self._entries),
+            }
+
 
 def execute_bucket(
     bucket: BucketPlan,

@@ -86,6 +86,12 @@ class WorkItem:
     # Picklable task description for backends that cross a process
     # boundary (transport.Lease ships it; fn never leaves this process).
     spec: Optional[tuple] = None
+    # Attempt number this key's CURRENT lifecycle started from. Nonzero
+    # only after a forgotten key is resubmitted while a prior lifecycle's
+    # lease still ran: attempt numbers stay monotonic per key (so lease
+    # ids never collide across lifecycles) and the retry budget is
+    # measured from this base instead of zero.
+    attempt_base: int = 0
 
 
 class Manager:
@@ -115,6 +121,10 @@ class Manager:
         # lease settles (drained in _settle), so a long-lived fleet session
         # stays bounded even when forget() races in-flight attempts.
         self._deferred_forget: set = set()
+        # Lease ids stranded by a key's resubmission (a new lifecycle began
+        # while the old lifecycle's attempt still ran): their completions
+        # must not settle the new lifecycle, so they are dropped on arrival.
+        self._orphaned: set = set()
         # Recent-window of winning-attempt durations for the straggler /
         # heartbeat heuristics: bounded so a session spanning thousands of
         # inputs never grows the median computation, with the sorted median
@@ -198,10 +208,33 @@ class Manager:
 
     def submit(self, item: WorkItem) -> None:
         """Enqueue work; legal before ``start`` and while Workers run.
-        Re-submitting a key that already has a result is a no-op."""
+        Re-submitting a key that already has a result is a no-op — EXCEPT
+        when that result is a stale memo retained only for a forgotten
+        key's still-running lease (deferred forget): the caller has ended
+        that lifecycle, so this submission starts a NEW one. The stale
+        memo is released, the old lifecycle's leases are orphaned (their
+        completions are dropped on arrival — they may have run under a
+        different scope, so their values must never settle this
+        lifecycle), and attempt numbering continues from the old high
+        water mark so lease ids stay unique across lifecycles."""
         with self._cond:
             if self._state in (_CLOSING, _CLOSED):
                 raise RuntimeError("Manager session is closed")
+            if item.key in self._deferred_forget:
+                self._deferred_forget.discard(item.key)
+                self._results.pop(item.key, None)
+                for lid in [
+                    lid for lid, it in self._running.items() if it.key == item.key
+                ]:
+                    self._orphaned.add(lid)
+                    del self._running[lid]
+                # queued duplicates (heartbeat-expiry re-enqueues racing in
+                # after forget) carry the OLD lifecycle's closure — purge
+                if any(it.key == item.key for it in self._queue):
+                    self._queue = collections.deque(
+                        it for it in self._queue if it.key != item.key
+                    )
+                item.attempt_base = self._attempt_seq.get(item.key, 0)
             if item.key in self._results:
                 return
             if item.callback is not None:
@@ -212,10 +245,19 @@ class Manager:
 
     def drain(self) -> None:
         """Block until every submitted key has a result (success or
-        permanent failure). Workers stay alive — more work may follow."""
+        permanent failure). Workers stay alive — more work may follow.
+
+        When the backend acknowledges completions ahead of their disk
+        commit (``async_commit``), drain is also the durability point: it
+        invokes the backend's ``barrier()`` so that after it returns, every
+        result is resolvable from the store by any process — the same
+        contract callers had when workers committed synchronously."""
         with self._cond:
             while self._pending:
                 self._cond.wait(_IDLE_TICK)
+        barrier = getattr(self._backend, "barrier", None)
+        if barrier is not None:
+            barrier()
 
     def close(self) -> None:
         """Retire the Worker pool. Completes everything already submitted
@@ -347,15 +389,22 @@ class Manager:
             for lease_id in status.inflight:
                 item = self._running.pop(lease_id, None)
                 if item is None:
+                    # an orphaned lease dies with its worker: no completion
+                    # will ever arrive to drain its drop-marker
+                    self._orphaned.discard(lease_id)
                     continue
                 self.heartbeat_expiries += 1
                 if item.key in self._results:
                     self._drain_deferred_locked(item.key)
                     continue
-                if self._attempt_seq.get(item.key, 0) < self.max_attempts:
+                if (
+                    self._attempt_seq.get(item.key, 0) - item.attempt_base
+                    < self.max_attempts
+                ):
                     self.retries += 1
                     self._queue.append(
-                        WorkItem(key=item.key, fn=item.fn, spec=item.spec)
+                        WorkItem(key=item.key, fn=item.fn, spec=item.spec,
+                                 attempt_base=item.attempt_base)
                     )
                     self._cond.notify()
                 elif not any(
@@ -412,12 +461,16 @@ class Manager:
             started = it.started_at or now
             if now - started <= deadline:
                 continue
-            if self._attempt_seq.get(it.key, 0) >= self.max_attempts:
+            if (
+                self._attempt_seq.get(it.key, 0) - it.attempt_base
+                >= self.max_attempts
+            ):
                 continue
             del self._running[lease]
             self.heartbeat_expiries += 1
             self.retries += 1
-            self._queue.append(WorkItem(key=it.key, fn=it.fn, spec=it.spec))
+            self._queue.append(WorkItem(key=it.key, fn=it.fn, spec=it.spec,
+                                        attempt_base=it.attempt_base))
             self._cond.notify()
 
     def _maybe_backup_locked(self) -> Optional[WorkItem]:
@@ -436,7 +489,8 @@ class Manager:
             for it in self._running.values()
             if it.key not in self._results
             and sum(1 for other in self._running.values() if other.key == it.key) < 2
-            and self._attempt_seq.get(it.key, 0) < self.max_attempts
+            and self._attempt_seq.get(it.key, 0) - it.attempt_base
+            < self.max_attempts
         ]
         if not candidates:
             return None
@@ -444,7 +498,8 @@ class Manager:
         age = now - (worst.started_at or now)
         if age > self.straggler_factor * max(median, 1e-3):
             self.backups_launched += 1
-            return WorkItem(key=worst.key, fn=worst.fn, spec=worst.spec)
+            return WorkItem(key=worst.key, fn=worst.fn, spec=worst.spec,
+                            attempt_base=worst.attempt_base)
         return None
 
     def _settle(
@@ -479,6 +534,11 @@ class Manager:
 
     def _handle_completion(self, comp: Completion) -> None:
         with self._cond:
+            if comp.lease_id in self._orphaned:
+                # a lease stranded by its key's resubmission (new
+                # lifecycle): the value may be from another scope — drop it
+                self._orphaned.discard(comp.lease_id)
+                return
             item = self._running.get(comp.lease_id)
         if comp.ok:
             self._settle(comp.key, comp.attempt, comp.value, comp.duration)
@@ -492,13 +552,14 @@ class Manager:
             self._running.pop(comp.lease_id, None)
             if (
                 item is not None
-                and item.attempts < self.max_attempts
+                and item.attempts - item.attempt_base < self.max_attempts
                 and item.key not in self._results
             ):
                 self.retries += 1
                 # attempt numbers are issued by _next_locked at lease time
                 self._queue.append(
-                    WorkItem(key=item.key, fn=item.fn, spec=item.spec)
+                    WorkItem(key=item.key, fn=item.fn, spec=item.spec,
+                             attempt_base=item.attempt_base)
                 )
                 self._cond.notify()
                 return
@@ -574,26 +635,38 @@ class Manager:
                     self._running.clear()
             for key, attempt, err in to_settle:
                 self._settle(key, attempt, err, None)
-            # demand-driven dispatch: one lease per free worker slot
-            free = sum(1 for st in view.values() if st.alive and not st.inflight)
-            while free > 0:
-                with self._cond:
-                    item = self._next_locked()
-                if item is None:
-                    break
-                lease = Lease(
-                    key=item.key, attempt=item.attempts, fn=item.fn,
-                    spec=item.spec,
-                )
-                if backend.offer(lease):
-                    self.dispatch_counts[self.backend_name] = (
-                        self.dispatch_counts.get(self.backend_name, 0) + 1
-                    )
-                    free -= 1
-                else:  # a slot vanished since the snapshot (worker death)
+            # demand-driven dispatch: free slots = per-worker queue depth
+            # (slots_per_worker > 1 when the backend batches frames — a
+            # worker holds a small backlog so it never idles between
+            # round trips; 1 for the historical one-lease-per-worker)
+            slots = max(1, int(getattr(backend, "slots_per_worker", 1)))
+            free = sum(
+                max(0, slots - len(st.inflight))
+                for st in view.values()
+                if st.alive
+            )
+            offer_batch = getattr(backend, "offer_batch", None)
+            if offer_batch is not None:
+                self._dispatch_batched(offer_batch, free)
+            else:
+                while free > 0:
                     with self._cond:
-                        self._unlease_locked(item)
-                    break
+                        item = self._next_locked()
+                    if item is None:
+                        break
+                    lease = Lease(
+                        key=item.key, attempt=item.attempts, fn=item.fn,
+                        spec=item.spec,
+                    )
+                    if backend.offer(lease):
+                        self.dispatch_counts[self.backend_name] = (
+                            self.dispatch_counts.get(self.backend_name, 0) + 1
+                        )
+                        free -= 1
+                    else:  # slot vanished since the snapshot (worker death)
+                        with self._cond:
+                            self._unlease_locked(item)
+                        break
             with self._cond:
                 if (
                     self._state == _CLOSING
@@ -602,6 +675,41 @@ class Manager:
                     and not self._queue
                 ):
                     return
+
+    def _dispatch_batched(self, offer_batch, free: int) -> None:
+        """Batched dispatch (DESIGN.md §14): lease up to ``free`` items in
+        one pass and hand them to the backend as a single ``offer_batch``
+        call — the backend coalesces each worker's share into one frame.
+        Rejected leases (slots vanished since the demand snapshot) are
+        unleased in reverse lease order, restoring queue position and
+        attempt numbers exactly as the one-at-a-time path would."""
+        while free > 0:
+            batch: List = []
+            with self._cond:
+                while len(batch) < free:
+                    item = self._next_locked()
+                    if item is None:
+                        break
+                    batch.append(item)
+            if not batch:
+                return
+            leases = [
+                Lease(key=it.key, attempt=it.attempts, fn=it.fn, spec=it.spec)
+                for it in batch
+            ]
+            rejected = {lease.lease_id for lease in offer_batch(leases)}
+            accepted = len(batch) - len(rejected)
+            if accepted:
+                self.dispatch_counts[self.backend_name] = (
+                    self.dispatch_counts.get(self.backend_name, 0) + accepted
+                )
+            if rejected:
+                with self._cond:
+                    for it in reversed(batch):
+                        if f"{it.key}#{it.attempts}" in rejected:
+                            self._unlease_locked(it)
+                return
+            free -= accepted
 
     # ------------------------------------------------------------------
     # One-shot batch mode (the pre-streaming API, kept verbatim)

@@ -57,7 +57,7 @@ try:  # advisory file locks are POSIX-only; SharedStore degrades gracefully
 except ImportError:  # pragma: no cover - non-POSIX
     fcntl = None  # type: ignore[assignment]
 
-__all__ = ["HierarchicalStore", "SharedStore", "stable_key"]
+__all__ = ["AsyncCommitQueue", "HierarchicalStore", "SharedStore", "stable_key"]
 
 # Entry footer: | payload bytes | magic (8) | payload length (8, LE) |
 # sha256(payload) (32) |. The payload is a complete npz archive; loads slice
@@ -160,6 +160,116 @@ def _footer_ok(data: bytes) -> Optional[bytes]:
     if hashlib.sha256(payload).digest() != footer[16:]:
         return None
     return payload
+
+
+class AsyncCommitQueue:
+    """In-memory staging tier + background flusher in front of a store
+    (DESIGN.md §14: the RPC backend's async commit fast path).
+
+    ``stage(key, value)`` records the value in the staging dict and enqueues
+    it; a daemon flusher thread drains the queue into the store through the
+    existing crash-safe protocol (``put`` + ``persist`` — serialise → tmp
+    sibling → fsync → atomic rename → footer-verified entry), then drops the
+    staged copy. Between ``stage`` and the flush landing, ``peek`` serves
+    the value from memory — the read-your-writes window the RPC leader uses
+    to answer worker fetches for not-yet-durable upstream results.
+
+    ``barrier()`` blocks until everything staged so far is durably
+    committed (the ``drain()``/``StudyState.save`` durability call): after
+    it returns, a store re-opened on the directory resolves every staged
+    key. A flush failure is counted (``errors``) and the entry is dropped
+    from staging so the barrier can never hang on a poisoned value —
+    durability degrades to the lease-retry path (tasks are pure; a
+    recompute republishes the same bytes).
+    """
+
+    def __init__(self, store: "HierarchicalStore"):
+        self._store = store
+        self._staged: Dict[str, Any] = {}
+        self._queue: "collections.deque[str]" = collections.deque()
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._thread: Optional[threading.Thread] = None
+        self._closed = False
+        self.staged = 0
+        self.committed = 0
+        self.errors = 0
+        self.staged_peak = 0
+
+    def _ensure_thread(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._drain_loop, name="rtf-flusher", daemon=True
+            )
+            self._thread.start()
+
+    def stage(self, key: str, value: Any) -> None:
+        """Record ``value`` for durable commit; returns immediately."""
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("AsyncCommitQueue is closed")
+            self._staged[key] = value
+            self._queue.append(key)
+            self.staged += 1
+            self.staged_peak = max(self.staged_peak, len(self._staged))
+            self._ensure_thread()
+            self._cond.notify_all()
+
+    def peek(self, key: str) -> Optional[Any]:
+        """The staged-but-not-yet-durable value of ``key``, or None."""
+        with self._lock:
+            return self._staged.get(key)
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._staged)
+
+    def _drain_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._queue and not self._closed:
+                    self._cond.wait(0.1)
+                if not self._queue:
+                    return  # closed and drained
+                key = self._queue.popleft()
+                value = self._staged.get(key)
+            if value is not None:
+                try:
+                    self._store.put(key, value)
+                    self._store.persist(key)
+                    with self._cond:
+                        self.committed += 1
+                except BaseException:  # noqa: BLE001 — see class docstring
+                    with self._cond:
+                        self.errors += 1
+            # drop the staged copy only after the disk commit (peek must
+            # keep serving the value until the store can)
+            with self._cond:
+                self._staged.pop(key, None)
+                self._cond.notify_all()
+
+    def barrier(self, timeout: Optional[float] = None) -> bool:
+        """Block until every staged entry is durably committed (or
+        dropped after a flush failure). Returns False on timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            self._ensure_thread()
+            while self._staged:
+                if deadline is not None and time.monotonic() >= deadline:
+                    return False
+                self._cond.wait(0.05)
+        return True
+
+    def close(self, flush: bool = True) -> None:
+        """Retire the flusher; with ``flush`` (default) drains first."""
+        if flush:
+            self.barrier()
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        t = self._thread
+        if t is not None and t.is_alive():
+            t.join(timeout=5.0)
 
 
 class HierarchicalStore:
@@ -444,6 +554,17 @@ class HierarchicalStore:
     @property
     def used_bytes(self) -> int:
         return self._used
+
+    def counters(self) -> Dict[str, int]:
+        """Point-in-time counter snapshot (the RPC workers ship this in
+        their heartbeat stats; study summaries aggregate it)."""
+        return {
+            "hits": self.hits,
+            "disk_hits": self.disk_hits,
+            "misses": self.misses,
+            "spills": self.spills,
+            "corrupt": self.corrupt,
+        }
 
 
 class SharedStore(HierarchicalStore):

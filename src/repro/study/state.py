@@ -199,6 +199,13 @@ class StudyState:
         store's disk tier first, so a resumed study rehydrates everything
         this one computed."""
         self.cache.flush()
+        # async-commit backends (DESIGN.md §14) ack completions ahead of
+        # their disk commit; the barrier makes everything staged durable so
+        # a checkpoint never references results newer than the store
+        if self.manager is not None and self.manager.is_running:
+            barrier = getattr(self.manager.backend, "barrier", None)
+            if barrier is not None:
+                barrier()
         payload = {
             "version": STATE_VERSION,
             "seed": self.seed,
