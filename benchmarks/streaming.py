@@ -1,25 +1,46 @@
-"""Streaming dataset executor benchmark (DESIGN.md §10) — the perf
-trajectory's first machine-readable series (``BENCH_streaming.json``).
+"""Streaming dataset executor benchmark (DESIGN.md §10, §15) — the perf
+trajectory's machine-readable series (``BENCH_streaming.json``).
 
-Two measurements:
+Three measurements:
 
 (1) **real** — a multi-tile study on small tiles with real JAX tasks:
     K sequential ``execute_plan`` calls (one Manager session per call)
     versus one ``execute_study`` over the same tiles (one persistent
-    session, per-tile stage edges), at 1/2/4 Workers. Reports wall-clock,
-    throughput, parallel efficiency and the Manager-session count.
+    session, per-tile stage edges) at 1/2/4 Workers, plus the same study
+    through the HIERARCHICAL scheduler (fanout=2 sub-manager pumps,
+    locality + stealing). Every row reports the scheduler observables —
+    pump occupancy, mean worker idle fraction, locality hit-rate — and
+    hierarchical outputs are asserted bit-identical to flat.
 
 (2) **paper scale** — the discrete-event streaming model
     (``runtime.simulate_stream``) fed by the hybrid plan's frozen per-stage
-    bucket makespans (measured JAX costs scaled to 4K×4K tiles), 6,113
-    tiles at 32→256 nodes × 28 cores, streaming vs the pre-streaming
-    global stage barrier. Paper claim: ≈0.92 efficiency at 256 nodes.
+    bucket makespans (measured JAX costs scaled to 4K×4K tiles), the full
+    6,113 tiles at 32→256 nodes × 28 cores. The flat single pump is
+    charged ``PUMP_SERVICE`` per scheduling event (the measured
+    order-of-magnitude of the Python pump's per-event cost — see the real
+    rows' pump occupancy), which saturates it at 256 nodes
+    (occupancy ≈ 0.87); fanout=16 sub-pumps with locality + stealing
+    recover the paper's regime. Paper claim: >92% efficiency at 256 nodes;
+    the artifact records the ``EFF_FLOOR`` gate CI enforces.
+
+(3) **autotune** — ``runtime.autotune_stream`` over re-planned bucket-size
+    candidates × pump fan-outs, minimizing simulated makespan. This is the
+    reuse-vs-balance trade made visible: coarse buckets maximize merged-
+    prefix reuse (least total work, best makespan), finer buckets maximize
+    efficiency; the chosen point and the best-efficiency point are both
+    reported.
+
+NOTE: the DES section deliberately ignores ``SMOKE`` for tile count and
+run count — the simulator is cheap, and a 200-tile smoke study hits a
+parallelism ceiling at 7,168 cores that reads as an efficiency collapse
+but is only a small-sample artifact. Only the measured-cost tile size
+shrinks under smoke.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import Dict, List, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -28,13 +49,40 @@ from repro.app import synthetic_tile
 from repro.app.pipeline import build_segmentation_stage, build_workflow
 from repro.core import Workflow
 from repro.engine import ClusterSpec, execute_plan, execute_study, plan_study
-from repro.runtime import simulate_stream
+from repro.runtime import autotune_stream, simulate_stream
 from repro.runtime.manager import Manager
 
 from benchmarks.common import SMOKE, measure_task_costs, moat_param_sets
 
 TILE = 4096  # paper §IV-B whole-slide tile size
-N_TILES_PAPER = 200 if SMOKE else 6113
+N_TILES_PAPER = 6113  # full dataset even under SMOKE (see module docstring)
+N_SIM_RUNS = 160
+
+# Charged per scheduling event (dispatch or completion settle) in the DES:
+# the measured order-of-magnitude of the Python pump's per-event cost
+# (lock + lease bookkeeping + callback; the real rows' pump_occ is the
+# container-scale measurement of the same quantity).
+PUMP_SERVICE = 1.5e-3
+HIER_FANOUT = 16
+# The paper-scale operating point: bucket size 14 keeps per-bucket work
+# fine enough that 7,168 cores stay load-balanced (bucket 28 trades that
+# balance for deeper merged-prefix reuse — the autotune rows quantify it).
+OPERATING_BUCKET = 14
+BUCKET_CANDIDATES = (14, 28) if SMOKE else (7, 14, 28)
+
+# CI regression gate (the sched-smoke job re-reads this from the artifact):
+# hierarchical simulated efficiency at 256 nodes must stay ≥ this floor.
+EFF_FLOOR = 0.90
+
+
+def _sched_tags(sched: Dict) -> str:
+    """The per-row scheduler observables (DESIGN.md §15)."""
+    return (
+        f"pump_occ={sched['pump_occupancy']:.2f}"
+        f"_idle={sched['worker_idle_fraction']:.2f}"
+        f"_hit={sched['locality_hit_rate']:.2f}"
+        f"_steals={sched['steals']}"
+    )
 
 
 def run(csv: List[str]) -> None:
@@ -62,24 +110,47 @@ def run(csv: List[str]) -> None:
         f"tiles={n_tiles}_sessions={seq_sessions}"
     )
 
-    for w in (1, 2, 4):
-        t0 = time.perf_counter()
-        sessions0 = Manager.sessions_started
-        stream = execute_study(plan, tiles, cluster=ClusterSpec(n_workers=w))
-        dt = time.perf_counter() - t0
-        assert Manager.sessions_started - sessions0 == 1
+    def check_identical(stream):
         for i in range(n_tiles):  # bit-identical to sequential per-tile runs
             for rid in range(n_runs):
                 assert np.array_equal(
                     np.asarray(stream.outputs[i][rid]["mask"]),
                     np.asarray(seq_outputs[i][rid]["mask"]),
                 )
+
+    for w in (1, 2, 4):
+        t0 = time.perf_counter()
+        sessions0 = Manager.sessions_started
+        stream = execute_study(plan, tiles, cluster=ClusterSpec(n_workers=w))
+        dt = time.perf_counter() - t0
+        assert Manager.sessions_started - sessions0 == 1
+        check_identical(stream)
         csv.append(
             f"streaming_real_workers{w},{dt*1e6/n_tiles:.0f},"
             f"throughput={stream.throughput:.2f}tiles_s"
             f"_eff={stream.parallel_efficiency:.2f}"
             f"_speedup_vs_seq={t_seq/max(dt,1e-9):.2f}x_sessions=1"
+            f"_{_sched_tags(stream.scheduler)}"
         )
+
+    # hierarchical scheduler over the same study: 2 sub-manager pumps,
+    # locality-aware dispatch + stealing — outputs must stay bit-identical
+    t0 = time.perf_counter()
+    sessions0 = Manager.sessions_started
+    hier = execute_study(
+        plan, tiles, cluster=ClusterSpec(n_workers=4), hierarchy="fanout=2,block=2"
+    )
+    dt = time.perf_counter() - t0
+    assert Manager.sessions_started - sessions0 == 1
+    assert hier.scheduler["mode"] == "hierarchical"
+    check_identical(hier)
+    csv.append(
+        f"streaming_real_hier_workers4_fanout2,{dt*1e6/n_tiles:.0f},"
+        f"throughput={hier.throughput:.2f}tiles_s"
+        f"_eff={hier.parallel_efficiency:.2f}"
+        f"_speedup_vs_seq={t_seq/max(dt,1e-9):.2f}x_sessions=1"
+        f"_{_sched_tags(hier.scheduler)}"
+    )
 
     # ---------------- (2) paper-scale streaming simulation ---------------
     mh = 64 if SMOKE else 128
@@ -88,28 +159,86 @@ def run(csv: List[str]) -> None:
     seg = build_segmentation_stage(
         TILE, TILE, costs={k: v * scale for k, v in costs.items()}
     )
-    sim_sets = moat_param_sets(40 if SMOKE else 160, seed=4)
-    sim_plan = plan_study(
-        Workflow(stages=(seg,)), sim_sets,
-        policy="hybrid", max_bucket_size=28, active_paths=28,
-    )
-    stage_bucket_costs = [
-        [b.schedule.makespan for b in sp.buckets] for sp in sim_plan.stages
-    ]
-    # normalization as a cheap parameter-free front stage, per DESIGN §10
-    stage_bucket_costs.insert(0, [costs["normalize"] * scale])
+    sim_sets = moat_param_sets(N_SIM_RUNS, seed=4)
 
-    nodes_list = (32, 256) if SMOKE else (32, 64, 128, 256)
-    for nodes in nodes_list:
-        sim = simulate_stream(
-            stage_bucket_costs, N_TILES_PAPER, n_nodes=nodes, seed=0
+    def bucket_costs(bucket_size: int) -> List[List[float]]:
+        sim_plan = plan_study(
+            Workflow(stages=(seg,)), sim_sets,
+            policy="hybrid", max_bucket_size=bucket_size,
+            active_paths=min(bucket_size, 28),
         )
-        bar = simulate_stream(
-            stage_bucket_costs, N_TILES_PAPER, n_nodes=nodes, seed=0, barrier=True
-        )
+        sbc = [
+            [b.schedule.makespan for b in sp.buckets] for sp in sim_plan.stages
+        ]
+        # normalization as a cheap parameter-free front stage, per DESIGN §10
+        sbc.insert(0, [costs["normalize"] * scale])
+        return sbc
+
+    costs_by_bucket = {bs: bucket_costs(bs) for bs in BUCKET_CANDIDATES}
+    op_costs = costs_by_bucket[OPERATING_BUCKET]
+
+    def sim_row(name: str, sim, extra: str = "") -> None:
         csv.append(
-            f"streaming_sim_nodes{nodes},{sim.makespan*1e6:.0f},"
+            f"{name},{sim.makespan*1e6:.0f},"
             f"eff={sim.parallel_efficiency:.3f}"
             f"_tput={sim.throughput:.2f}tiles_s"
-            f"_vs_barrier={bar.makespan/max(sim.makespan,1e-12):.2f}x"
+            f"_pump_occ={sim.pump_occupancy:.2f}"
+            f"_idle={sim.worker_idle_fraction:.2f}"
+            f"_hit={sim.locality_hit_rate:.2f}"
+            f"_steals={sim.steals}{extra}"
         )
+
+    nodes_list = (32, 256) if SMOKE else (32, 64, 128, 256)
+    hier_eff_256 = 0.0
+    for nodes in nodes_list:
+        flat = simulate_stream(
+            op_costs, N_TILES_PAPER, n_nodes=nodes, seed=0,
+            pump_service=PUMP_SERVICE,
+        )
+        bar = simulate_stream(
+            op_costs, N_TILES_PAPER, n_nodes=nodes, seed=0,
+            pump_service=PUMP_SERVICE, barrier=True,
+        )
+        sim_row(
+            f"streaming_sim_nodes{nodes}_flat", flat,
+            extra=f"_vs_barrier={bar.makespan/max(flat.makespan,1e-12):.2f}x",
+        )
+        hier = simulate_stream(
+            op_costs, N_TILES_PAPER, n_nodes=nodes, seed=0,
+            pump_service=PUMP_SERVICE, fanout=HIER_FANOUT, locality=True,
+        )
+        sim_row(
+            f"streaming_sim_nodes{nodes}_hier", hier,
+            extra=f"_fanout={hier.fanout}"
+            f"_vs_flat={flat.makespan/max(hier.makespan,1e-12):.2f}x",
+        )
+        if nodes == 256:
+            hier_eff_256 = hier.parallel_efficiency
+
+    # ---------------- (3) autotune bucket size × fan-out -----------------
+    tuned = autotune_stream(
+        costs_by_bucket, N_TILES_PAPER, n_nodes=256,
+        pump_service=PUMP_SERVICE, locality=True, seed=0,
+    )
+    sim_row(
+        f"streaming_autotune_bucket{tuned.bucket_size}_fanout{tuned.fanout}",
+        tuned.sim,
+        extra=f"_candidates={len(tuned.table)}",
+    )
+    best_eff = max(tuned.table, key=lambda row: row[3])
+    csv.append(
+        f"streaming_autotune_best_eff,{best_eff[2]*1e6:.0f},"
+        f"bucket={best_eff[0]}_fanout={best_eff[1]}_eff={best_eff[3]:.3f}"
+    )
+
+    # the recorded regression gate: CI fails if the hierarchical 256-node
+    # efficiency ever drops below the floor written into this artifact
+    assert hier_eff_256 >= EFF_FLOOR, (
+        f"hierarchical 256-node efficiency {hier_eff_256:.3f} fell below "
+        f"the {EFF_FLOOR} floor"
+    )
+    csv.append(
+        f"streaming_sim_floor,{EFF_FLOOR*1e6:.0f},"
+        f"floor={EFF_FLOOR:.2f}_achieved={hier_eff_256:.3f}_nodes=256"
+        f"_paper=0.92"
+    )

@@ -317,6 +317,7 @@ def run_study(
     n_workers: int = 1,
     memory_budget_bytes: Optional[int] = None,
     backend: Any = None,
+    hierarchy: Any = None,
 ) -> Dict[str, Any]:
     """Execute an SA study over one tile and return per-run Dice + counters.
 
@@ -347,7 +348,7 @@ def run_study(
     raw = {"raw": jnp.asarray(image)}
     backend_obj = _backend_for(backend, [image], costs)
     try:
-        result = execute_plan(plan, raw, backend=backend_obj)
+        result = execute_plan(plan, raw, backend=backend_obj, hierarchy=hierarchy)
     finally:
         _backend_cleanup(backend, backend_obj)
 
@@ -391,6 +392,7 @@ def run_dataset_study(
     n_workers: int = 2,
     memory_budget_bytes: Optional[int] = None,
     backend: Any = None,
+    hierarchy: Any = None,
 ) -> Dict[str, Any]:
     """Dataset-level SA study: many tiles streamed through ONE plan and one
     persistent Manager session (DESIGN.md §10).
@@ -421,7 +423,9 @@ def run_dataset_study(
     raws = [{"raw": jnp.asarray(im)} for im in images]
     backend_obj = _backend_for(backend, images, costs)
     try:
-        stream = execute_study(plan, raws, cluster=cluster, backend=backend_obj)
+        stream = execute_study(
+            plan, raws, cluster=cluster, backend=backend_obj, hierarchy=hierarchy
+        )
     finally:
         _backend_cleanup(backend, backend_obj)
 
@@ -477,6 +481,7 @@ def run_adaptive_study(
     store_dir: Optional[str] = None,
     sa_policy: Optional[Any] = None,
     backend: Any = None,
+    hierarchy: Any = None,
 ) -> Dict[str, Any]:
     """Adaptive MOAT → prune → VBD → refine study over tiles (DESIGN.md §11).
 
@@ -538,6 +543,7 @@ def run_adaptive_study(
         # the zero-recompute-resume guarantee (the workers' caches are
         # where the results live in spec mode)
         backend=_backend_for(backend, images, costs, store_dir=store_dir),
+        hierarchy=hierarchy,
     )
     try:
         state = driver.run(max_rounds=max_rounds)

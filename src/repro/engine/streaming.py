@@ -76,6 +76,7 @@ def execute_study(
     cache: Optional[ResultCache] = None,
     manager: Optional[Manager] = None,
     backend: Any = None,
+    hierarchy: Any = None,
     input_keys: Optional[Sequence[Any]] = None,
     key_prefix: str = "",
 ) -> StudyStreamResult:
@@ -109,7 +110,15 @@ def execute_study(
 
     ``backend`` selects the session's WorkerBackend (default: in-process
     Worker threads; mutually exclusive with ``manager``, whose own backend
-    is used). With a **spec-capable** backend (``ProcessRpcBackend``) the
+    is used). ``hierarchy`` selects the session's scheduler topology
+    (DESIGN.md §15): ``None``/"flat" keeps the single-pump Manager,
+    ``"fanout=N"`` (or an int, ``"auto"``, or a
+    :class:`~repro.runtime.hierarchy.HierarchySpec`) splits dispatch
+    across N sub-manager pumps with locality-aware routing and work
+    stealing — outputs stay bit-identical, only placement changes; also
+    mutually exclusive with ``manager``. The session's scheduler counters
+    (pump occupancy, steals, locality hit-rate) are returned in
+    ``StudyStreamResult.scheduler``. With a **spec-capable** backend (``ProcessRpcBackend``) the
     executor ships no closures: it broadcasts the plan's ``recipe`` (the
     picklable planning arguments — workers rebuild the plan against their
     own ``build()`` context) and each WorkItem carries a ``("bucket",
@@ -137,6 +146,7 @@ def execute_study(
             heartbeat_timeout=cluster.heartbeat_timeout,
             straggler_factor=cluster.straggler_factor,
             enable_backup_tasks=cluster.enable_backup_tasks,
+            hierarchy=hierarchy,
         )
     else:
         owns_manager = False
@@ -145,6 +155,11 @@ def execute_study(
             raise ValueError(
                 "pass backend= when the executor owns the session; an "
                 "external Manager already carries its own backend"
+            )
+        if hierarchy is not None:
+            raise ValueError(
+                "pass hierarchy= when the executor owns the session; an "
+                "external Manager already carries its own hierarchy"
             )
         if not mgr.is_running:
             raise RuntimeError("external Manager session must be started")
@@ -186,6 +201,10 @@ def execute_study(
                     # closure; workers hold the same plan (rebuilt from the
                     # recipe) and resolve src from the shared store
                     spec=("bucket", plan_id, i, si, bi) if spec_mode else None,
+                    # reuse-tree prefix for locality-aware hierarchical
+                    # dispatch: input first (stage s+1 chases stage s's
+                    # worker), then the bucket's trie scope
+                    path=(f"{key_prefix}{input_keys[i]}",) + bucket.cache_scope,
                     callback=lambda _key, value, i=i, si=si: on_bucket(i, si, value),
                 )
             )
@@ -294,4 +313,5 @@ def execute_study(
         ),
         backend=mgr.backend_name,
         dispatch_counts=dispatch_delta,
+        scheduler=mgr.scheduler_stats(),
     )

@@ -3,6 +3,10 @@ transport-agnostic WorkerBackend boundary (threads or RPC worker
 processes), hierarchical storage, fault tolerance (heartbeats/retry/backup
 tasks), elastic scaling, and the paper-scale cluster simulator."""
 
+from repro.runtime.hierarchy import (  # noqa: F401
+    HierarchySpec,
+    parse_hierarchy,
+)
 from repro.runtime.manager import Manager, WorkItem, run_study_distributed  # noqa: F401
 from repro.runtime.transport import (  # noqa: F401
     Completion,
@@ -16,8 +20,10 @@ from repro.runtime.transport import (  # noqa: F401
     make_backend,
 )
 from repro.runtime.simulator import (  # noqa: F401
+    AutotuneResult,
     ClusterSim,
     StreamSim,
+    autotune_stream,
     simulate_cluster,
     simulate_stream,
 )

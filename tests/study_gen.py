@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import functools
 import random
+import time
 import zlib
 from typing import Any, Dict, List, Sequence, Tuple
 
@@ -152,6 +153,40 @@ def random_param_sets(
     return [
         tuple((nm, rng.randrange(cards[nm])) for nm in names) for _ in range(n_runs)
     ]
+
+
+# ---------------------------------------------------------------------------
+# Calibration form: tasks whose wall-time EQUALS their declared cost
+# ---------------------------------------------------------------------------
+
+
+def _sleep_task(stage_idx: int, duration: float, x: int, **kw) -> int:
+    time.sleep(duration)
+    return _mix_task(stage_idx, 0, x, **kw)
+
+
+def sleep_workflow(stage_costs: Sequence[float]) -> Workflow:
+    """One parametric task per stage that *sleeps* its declared cost (in
+    seconds) before mixing — so a plan's ``schedule.makespan`` values are
+    real wall-seconds and a measured run can be compared against
+    ``simulate_stream``'s prediction (the simulator-calibration suite).
+    Sleeps release the GIL, so thread-Worker concurrency is real."""
+    stages = tuple(
+        StageSpec(
+            name=f"stage{si}",
+            tasks=(
+                TaskSpec(
+                    name=f"s{si}t0",
+                    param_names=(f"sp{si}",),
+                    fn=functools.partial(_sleep_task, si, cost),
+                    cost=cost,
+                    output_bytes=64,
+                ),
+            ),
+        )
+        for si, cost in enumerate(stage_costs)
+    )
+    return Workflow(stages=stages)
 
 
 def naive_outputs(workflow: Workflow, param_sets, input_state):

@@ -9,7 +9,10 @@ double-count when a backup and its original both complete (first completion
 wins; only the winner's counters and callback fire).
 """
 
+import os
+import pathlib
 import random
+import signal
 import threading
 import time
 
@@ -17,9 +20,17 @@ import pytest
 
 from repro.core import StageSpec, TaskSpec, Workflow
 from repro.engine import ClusterSpec, execute_study, plan_study
+from repro.runtime import ProcessRpcBackend
 from repro.runtime.manager import Manager, WorkItem
 
 from study_gen import naive_outputs, random_param_sets, random_workflow
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 class Injector:
@@ -254,6 +265,218 @@ class TestPersistentManagerSessions:
         assert out["k"] in ("alive", "zombie")
         assert mgr.heartbeat_expiries >= 1
         assert mgr.retries >= 1
+
+
+# ---------------------------------------------------------------------------
+# Work stealing under fire (ISSUE 7): steal storms + expired leases +
+# killed workers must preserve exactly-once settlement and callbacks
+# ---------------------------------------------------------------------------
+
+# ``block=1, steal_min=1`` delegates one item at a time and lets every idle
+# pump raid every peer — the maximum-contention "steal storm" topology. Any
+# double-lease, lost item, or double-settlement shows up as a wrong count.
+STORM = "fanout={f},block=1,steal_min=1"
+
+
+def _hier_hang_until_killed(marker_dir):
+    """Spawn-picklable: first execution in the fleet records its pid and
+    hangs for the test to SIGKILL; retries return fast."""
+    marker = pathlib.Path(marker_dir) / "pid"
+    if not marker.exists():
+        marker.write_text(str(os.getpid()))
+        time.sleep(60.0)
+        return "hung"
+    return "fast"
+
+
+def _hier_quick(tag):
+    time.sleep(0.01)
+    return f"q-{tag}"
+
+
+def test_steal_storm_with_expired_leases_exactly_once():
+    """Manager-level storm: 40 keys over 4 sub-pumps with one-item blocks,
+    aggressive backups (straggler_factor 0.5), one worker that goes dead
+    past the heartbeat deadline mid-lease, and transient failures. Every
+    key must settle exactly once — one callback, one result — and the
+    storm must actually steal (the topology guarantees imbalance)."""
+    counts = {}
+    lock = threading.Lock()
+
+    def cb(key, value):
+        with lock:
+            counts[key] = counts.get(key, 0) + 1
+
+    first = threading.Event()
+
+    def dead_then_alive():
+        if not first.is_set():
+            first.set()
+            time.sleep(0.4)  # well past the 50ms heartbeat deadline
+            return "zombie"
+        return "alive"
+
+    flaky_left = [2]
+
+    def flaky():
+        with lock:
+            if flaky_left[0] > 0:
+                flaky_left[0] -= 1
+                raise RuntimeError("injected transient fault")
+        return "ok"
+
+    mgr = Manager(
+        heartbeat_timeout=0.05,
+        straggler_factor=0.5,
+        max_attempts=6,
+        hierarchy=STORM.format(f=4),
+    )
+    mgr.submit(WorkItem(key="dead", fn=dead_then_alive, callback=cb))
+    mgr.submit(WorkItem(key="flaky", fn=flaky, callback=cb))
+    for i in range(38):
+        mgr.submit(
+            WorkItem(
+                key=f"k{i}",
+                fn=lambda i=i: time.sleep(0.005) or i * 3,
+                callback=cb,
+            )
+        )
+    out = mgr.run(4, expected=40)
+    stats = mgr.scheduler_stats()
+    assert len(out) == 40
+    assert out["dead"] in ("alive", "zombie")
+    assert out["flaky"] == "ok"
+    assert all(out[f"k{i}"] == i * 3 for i in range(38))
+    assert all(c == 1 for c in counts.values()), {
+        k: c for k, c in counts.items() if c != 1
+    }
+    assert set(counts) == set(out)
+    assert stats["mode"] == "hierarchical" and stats["fanout"] == 4
+    assert mgr.heartbeat_expiries >= 1
+    assert mgr.retries >= 3  # 2 injected faults + the expired lease
+
+
+def _check_streaming_storm(seed, fanout, failures, straggle):
+    """The storm property: streaming under a steal storm + transient
+    failures + an optional injected straggler (backup clones racing
+    originals) leaves outputs bit-identical to the fault-free oracle with
+    the exactly-once accounting identity intact."""
+    inj = Injector()
+    rng = random.Random(seed)
+    wf, clean_wf, names, cards = instrumented_workflow(rng, inj)
+    sets = random_param_sets(rng, names, cards, rng.randint(2, 12))
+    inputs = [rng.randrange(1 << 40) for _ in range(2)]
+    oracles = [naive_outputs(clean_wf, sets, x) for x in inputs]
+    plan = plan_study(wf, sets, policy="hybrid", max_bucket_size=2)
+
+    inj.failures_left = failures
+    if straggle:
+        inj.sleep_once_seconds = 0.3
+    inj.active = True
+    try:
+        stream = execute_study(
+            plan,
+            inputs,
+            cluster=ClusterSpec(
+                n_workers=4, max_attempts=8, straggler_factor=1.5
+            ),
+            hierarchy=STORM.format(f=fanout),
+        )
+    finally:
+        inj.active = False
+    for i in range(len(inputs)):
+        assert stream.outputs[i] == oracles[i], i
+    assert (
+        stream.tasks_executed + stream.cache_hits
+        == plan.tasks_executed * len(inputs)
+    )
+    assert stream.scheduler["fanout"] == fanout
+
+
+@pytest.mark.parametrize("seed,fanout,failures,straggle", [
+    (601, 2, 0, False),
+    (602, 3, 2, False),
+    (603, 4, 3, True),
+    (604, 4, 1, True),
+])
+def test_streaming_storm_bit_identical(seed, fanout, failures, straggle):
+    """Seeded instances of the storm property (always run; the hypothesis
+    layer below explores the same contract when hypothesis is installed)."""
+    _check_streaming_storm(seed, fanout, failures, straggle)
+
+
+if HAVE_HYPOTHESIS:
+
+    class TestHypothesisStealStorm:
+        @given(
+            seed=st.integers(min_value=0, max_value=2**20),
+            fanout=st.sampled_from([2, 3, 4]),
+            failures=st.integers(min_value=0, max_value=3),
+            straggle=st.booleans(),
+        )
+        @settings(max_examples=10, deadline=None)
+        def test_streaming_storm_bit_identical(
+            self, seed, fanout, failures, straggle
+        ):
+            _check_streaming_storm(seed, fanout, failures, straggle)
+
+
+def test_sigkilled_worker_under_hierarchy_settles_exactly_once(tmp_path):
+    """fanout=2 over RPC worker processes, one worker SIGKILLed mid-lease:
+    the leader's heartbeat expiry re-enqueues the lease, a sub-pump whose
+    shard lost its only worker goes idle, and the surviving shard (via
+    redistribution/stealing) completes everything — every key exactly once."""
+    marker_dir = tmp_path / "marker"
+    marker_dir.mkdir()
+    counts = {}
+    lock = threading.Lock()
+
+    def cb(key, value):
+        with lock:
+            counts[key] = counts.get(key, 0) + 1
+
+    mgr = Manager(
+        backend=ProcessRpcBackend(
+            store_dir=str(tmp_path / "store"), heartbeat_interval=0.05
+        ),
+        enable_backup_tasks=False,
+        max_attempts=3,
+        hierarchy=STORM.format(f=2),
+    )
+    mgr.start(2)
+    try:
+        mgr.submit(
+            WorkItem(
+                key="victim",
+                spec=("call", _hier_hang_until_killed, (str(marker_dir),), {}),
+                callback=cb,
+            )
+        )
+        for i in range(4):
+            mgr.submit(
+                WorkItem(
+                    key=f"pad{i}",
+                    spec=("call", _hier_quick, (i,), {}),
+                    callback=cb,
+                )
+            )
+        pid_file = marker_dir / "pid"
+        deadline = time.monotonic() + 30
+        while not pid_file.exists():
+            assert time.monotonic() < deadline, "hang task never started"
+            time.sleep(0.02)
+        os.kill(int(pid_file.read_text()), signal.SIGKILL)
+        mgr.drain()
+        out = mgr.results()
+        assert out["victim"] == "fast"  # re-run by the SURVIVING worker
+        for i in range(4):
+            assert out[f"pad{i}"] == f"q-{i}"
+        assert all(c == 1 for c in counts.values()), counts
+        assert set(counts) == set(out)
+        assert mgr.heartbeat_expiries >= 1
+        assert mgr.scheduler_stats()["mode"] == "hierarchical"
+    finally:
+        mgr.close()
 
 
 def test_streaming_pipelines_across_inputs():
