@@ -1,0 +1,312 @@
+"""Socket vs process WorkerBackend on the streaming workload, over the
+object-store tier (DESIGN.md §16) — ``BENCH_net.json``.
+
+The multi-host control plane's cost model on loopback: the same hybrid
+plan over the same tiles executed through (a) the in-process
+:class:`ThreadBackend`, (b) the all-flags :class:`ProcessRpcBackend` (the
+single-host shipping default: pipes + shared-memory handoff), and (c) a
+:class:`SocketBackend` fleet — ≥2 worker processes joining by TCP against
+an ``obj:<root>`` store, i.e. NO shared working directory beyond the
+store root, and no shm route (results cross as inline payloads or store
+keys). The socket row reports its wall-time ratio against both, plus the
+**per-frame overhead**: the socket-minus-thread wall-time delta divided by
+the control frames the leader actually moved (lease frames + completion
+batches + heartbeats observed), the figure a deployment multiplies by its
+own RTT.
+
+A final fault row replays the ISSUE-8 acceptance scenario at benchmark
+scale: a 3-worker fleet loses one worker to SIGKILL and a second to a cut
+TCP connection mid-lease, finishes every task with exactly-once callbacks,
+and the surviving session then runs the full study — bit-identical to the
+thread oracle. The row records the degraded-session study wall time.
+
+Asserted:
+
+* **bit-identical outputs** — every mask from every socket session equals
+  the thread backend's, per tile per run (frames and object entries are a
+  transport, never an approximation);
+* **real dispatch** — socket sessions route every bucket through the
+  socket backend;
+* **exactly-once** — in the fault scenario every callback fires once
+  despite a kill and a partition;
+* **the ratio gate** — the loopback socket fleet must hold within
+  ``MAX_RATIO`` of thread wall time; a regression raises, the harness
+  exits non-zero, and CI's ``net-smoke`` guard step fails the job.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import shutil
+import signal
+import tempfile
+import time
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.app import synthetic_tile
+from repro.app.pipeline import build_workflow, pathology_rpc_build
+from repro.engine import ClusterSpec, execute_plan, execute_study, plan_study
+from repro.runtime import Manager, ProcessRpcBackend, SocketBackend, WorkItem
+from repro.runtime.transport import process_flag_kwargs
+
+from benchmarks.common import SMOKE, moat_param_sets
+
+N_WORKERS = 2
+MAX_RATIO = 6.0  # gate: loopback socket fleet (obj store) vs thread.
+# Wider than rpc.py's 2× because the socket row pays for everything the
+# multi-host design gives up on purpose: no shm handoff, sha256-etag
+# object writes, and smoke-profile tasks small enough that per-frame
+# latency dominates (observed ~3× on loopback smoke; the gate catches
+# step regressions, not noise).
+WARMUP_PASSES = 2
+
+
+def _quick_task(tag):
+    return f"q-{tag}"
+
+
+def _hang_until_killed(marker_dir):
+    marker = pathlib.Path(marker_dir) / "kill_pid"
+    if not marker.exists():
+        # write-then-rename: the reader polls for existence, so the pid
+        # must be complete the instant the path appears
+        tmp = marker.with_suffix(".tmp")
+        tmp.write_text(str(os.getpid()))
+        os.replace(tmp, marker)
+        time.sleep(60.0)
+        return "hung"
+    return "fast"
+
+
+def _slow_first(marker_dir):
+    marker = pathlib.Path(marker_dir) / "slow"
+    try:
+        fd = os.open(marker, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        os.close(fd)
+    except FileExistsError:
+        return "done"
+    time.sleep(2.0)
+    return "done"
+
+
+def _assert_identical(stream, thread_stream, n_tiles: int, n_runs: int,
+                      label: str) -> None:
+    for i in range(n_tiles):
+        for rid in range(n_runs):
+            assert np.array_equal(
+                np.asarray(stream.outputs[i][rid]["mask"]),
+                np.asarray(thread_stream.outputs[i][rid]["mask"]),
+            ), f"[{label}] tile {i} run {rid} diverged across the wire"
+
+
+def _wait_for(pred, timeout: float, what: str) -> None:
+    deadline = time.monotonic() + timeout
+    while not pred():
+        if time.monotonic() >= deadline:
+            raise RuntimeError(f"timed out waiting for {what}")
+        time.sleep(0.02)
+
+
+def run(csv: List[str]) -> None:
+    size = 32 if SMOKE else 56
+    n_tiles = 2 if SMOKE else 4
+    n_runs = 8 if SMOKE else 24
+    wf = build_workflow(size, size)
+    sets = moat_param_sets(n_runs, seed=9)
+    n_runs = len(sets)  # MOAT rounds to whole trajectories of dim+1 runs
+    plan = plan_study(wf, sets, policy="hybrid", max_bucket_size=8, active_paths=2)
+    tiles_np = [synthetic_tile(size, size, seed=t) for t in range(n_tiles)]
+    tiles = [{"raw": jnp.asarray(im)} for im in tiles_np]
+
+    execute_plan(plan, tiles[0])  # warm: jit compile every task variant
+
+    # ---------------- thread backend (the in-process oracle) -------------
+    t0 = time.perf_counter()
+    thread_stream = execute_study(
+        plan, tiles, cluster=ClusterSpec(n_workers=N_WORKERS)
+    )
+    t_thread = time.perf_counter() - t0
+    assert thread_stream.backend == "thread"
+    csv.append(
+        f"net_thread_workers{N_WORKERS},{t_thread*1e6/n_tiles:.0f},"
+        f"throughput={thread_stream.throughput:.2f}tiles_s"
+    )
+
+    # ---------------- process backend (single-host reference) ------------
+    backend = ProcessRpcBackend(
+        build=pathology_rpc_build,
+        build_kwargs={"images": tiles_np},
+        **process_flag_kwargs("process"),
+    )
+    mgr = Manager(backend=backend)
+    mgr.start(N_WORKERS)
+    try:
+        # untimed warmups under distinct input_keys (see benchmarks/rpc.py
+        # for the full rationale: spawn + jit + plan builds stay out of the
+        # timed window, and the warmup outputs can never serve it)
+        passes = [f"warm{p}" for p in range(WARMUP_PASSES)]
+        for n, p in enumerate(passes + [passes[-1]]):
+            execute_study(
+                plan, tiles, cluster=ClusterSpec(n_workers=N_WORKERS),
+                manager=mgr,
+                input_keys=[f"{p}:{t}" for t in range(n_tiles)],
+                key_prefix=f"w{n}:",
+            )
+        t0 = time.perf_counter()
+        proc_stream = execute_study(
+            plan, tiles, cluster=ClusterSpec(n_workers=N_WORKERS),
+            manager=mgr, key_prefix="t:",
+        )
+        t_proc = time.perf_counter() - t0
+        assert proc_stream.backend == "process"
+        _assert_identical(proc_stream, thread_stream, n_tiles, n_runs, "process")
+    finally:
+        mgr.close()
+        backend.cleanup()
+    csv.append(
+        f"net_process_all,{t_proc*1e6/n_tiles:.0f},"
+        f"vs_thread={t_proc/max(t_thread, 1e-9):.2f}x"
+    )
+
+    # ---------------- socket fleet over the object-store tier ------------
+    obj_root = tempfile.mkdtemp(prefix="bench_net_obj_")
+    backend = SocketBackend(
+        build=pathology_rpc_build,
+        build_kwargs={"images": tiles_np},
+        store=f"obj:{obj_root}",
+    )
+    mgr = Manager(backend=backend)
+    mgr.start(N_WORKERS)
+    try:
+        passes = [f"warm{p}" for p in range(WARMUP_PASSES)]
+        for n, p in enumerate(passes + [passes[-1]]):
+            execute_study(
+                plan, tiles, cluster=ClusterSpec(n_workers=N_WORKERS),
+                manager=mgr,
+                input_keys=[f"{p}:{t}" for t in range(n_tiles)],
+                key_prefix=f"w{n}:",
+            )
+        frames_before = backend.stats()["leader"]
+        t0 = time.perf_counter()
+        sock_stream = execute_study(
+            plan, tiles, cluster=ClusterSpec(n_workers=N_WORKERS),
+            manager=mgr, key_prefix="t:",
+        )
+        t_sock = time.perf_counter() - t0
+        assert sock_stream.backend == "socket"
+        assert set(sock_stream.dispatch_counts) == {"socket"}
+        _assert_identical(sock_stream, thread_stream, n_tiles, n_runs, "socket")
+        leader = backend.stats()["leader"]
+        frames = (
+            (leader["lease_frames"] - frames_before["lease_frames"])
+            + (leader["comp_batches"] - frames_before["comp_batches"])
+        )
+        # everything durable went through the object store: entries exist
+        # under the root and serve reads back (no shared dir beyond it)
+        entries = pathlib.Path(obj_root) / "entries"
+        assert entries.is_dir() and any(entries.iterdir()), "no object entries?"
+        committed = [
+            k for k in backend.store.committed_keys() if k.startswith("rpc:")
+        ]
+        assert committed, "no store commits over the object tier?"
+    finally:
+        mgr.close()
+        backend.cleanup()
+        shutil.rmtree(obj_root, ignore_errors=True)
+
+    ratio_thread = t_sock / max(t_thread, 1e-9)
+    ratio_proc = t_sock / max(t_proc, 1e-9)
+    overhead_us = (t_sock - t_thread) * 1e6 / max(frames, 1)
+    csv.append(
+        f"net_socket_loopback,{t_sock*1e6/n_tiles:.0f},"
+        f"throughput={sock_stream.throughput:.2f}tiles_s"
+        f"_vs_thread={ratio_thread:.2f}x"
+        f"_vs_process={ratio_proc:.2f}x"
+        f"_frames={frames}"
+        f"_overhead_per_frame={overhead_us:.0f}us"
+        f"_committed_keys={len(committed)}"
+    )
+
+    # ---------------- fault recovery (the acceptance scenario) -----------
+    obj_root = tempfile.mkdtemp(prefix="bench_net_fault_")
+    marker_dir = tempfile.mkdtemp(prefix="bench_net_marker_")
+    fired = {}
+    backend = SocketBackend(
+        build=pathology_rpc_build,
+        build_kwargs={"images": tiles_np},
+        store=f"obj:{obj_root}",
+        heartbeat_interval=0.05,
+    )
+    mgr = Manager(backend=backend, enable_backup_tasks=False, max_attempts=3)
+    mgr.start(3)
+    try:
+        def cb(key, value):
+            fired[key] = fired.get(key, 0) + 1
+
+        t0 = time.perf_counter()
+        mgr.submit(WorkItem(key="killed", callback=cb,
+                            spec=("call", _hang_until_killed, (marker_dir,), {})))
+        mgr.submit(WorkItem(key="cut", callback=cb,
+                            spec=("call", _slow_first, (marker_dir,), {})))
+        for i in range(4):
+            mgr.submit(WorkItem(key=f"pad{i}", callback=cb,
+                                spec=("call", _quick_task, (i,), {})))
+
+        pid_file = pathlib.Path(marker_dir) / "kill_pid"
+        _wait_for(pid_file.exists, 30, "hang task to start")
+        victim_pid = int(pid_file.read_text())
+
+        def cut_holder():
+            for wid, st in backend.heartbeat_view().items():
+                if wid >= 0 and st.alive and any(
+                    lid.startswith("cut#") for lid in st.inflight
+                ):
+                    return wid
+            return None
+
+        _wait_for(lambda: cut_holder() is not None, 15, "cut task leased")
+        cut_wid = cut_holder()
+        os.kill(victim_pid, signal.SIGKILL)  # fault 1: a dead host
+        assert backend.disconnect(cut_wid)   # fault 2: a partition
+        mgr.drain()
+        t_recover = time.perf_counter() - t0
+        out = mgr.results()
+        assert out["killed"] == "fast" and out["cut"] == "done"
+        assert all(n == 1 for n in fired.values()), fired  # exactly once
+        assert len(fired) == 6
+
+        # the degraded session still runs the full study, bit-identical
+        t0 = time.perf_counter()
+        fault_stream = execute_study(
+            plan, tiles, cluster=ClusterSpec(n_workers=2), manager=mgr,
+            key_prefix="f:",
+        )
+        t_fault = time.perf_counter() - t0
+        assert fault_stream.backend == "socket"
+        _assert_identical(fault_stream, thread_stream, n_tiles, n_runs, "fault")
+        leader = backend.stats()["leader"]
+    finally:
+        mgr.close()
+        backend.cleanup()
+        shutil.rmtree(obj_root, ignore_errors=True)
+        shutil.rmtree(marker_dir, ignore_errors=True)
+    csv.append(
+        f"net_fault_recovery,{t_fault*1e6/n_tiles:.0f},"
+        f"drain={t_recover:.2f}s"
+        f"_callbacks={len(fired)}x1"
+        f"_reconnects={leader['reconnects']}"
+        f"_disconnects={leader['disconnects']}"
+    )
+
+    # the acceptance gate (ISSUE 8): the loopback fleet over the object
+    # tier must hold within MAX_RATIO of the in-process oracle
+    if ratio_thread > MAX_RATIO:
+        raise RuntimeError(
+            f"socket backend is {ratio_thread:.2f}x thread wall time — "
+            f"regression past the {MAX_RATIO:.1f}x gate "
+            f"(vs process: {ratio_proc:.2f}x, per-frame {overhead_us:.0f}us)"
+        )

@@ -8,7 +8,7 @@ traceback) and makes the harness exit non-zero after the remaining modules
 finish.
 
 Run: PYTHONPATH=src python -m benchmarks.run
-     [--only fig6,fig7,table2,fig8,streaming,adaptive,fleet,rpc] [--out-dir DIR]
+     [--only fig6,fig7,table2,fig8,streaming,adaptive,fleet,rpc,net] [--out-dir DIR]
      [--quick]   (the CI smoke profile: shrinks sizes, same pipeline;
                   equivalent to REPRO_BENCH_SMOKE=1)
 """
@@ -42,7 +42,7 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: fig6,fig7,table2,fig8,streaming,adaptive,fleet,rpc",
+        help="comma list: fig6,fig7,table2,fig8,streaming,adaptive,fleet,rpc,net",
     )
     ap.add_argument(
         "--out-dir", default=".", help="where BENCH_<module>.json artifacts land"
@@ -60,7 +60,9 @@ def main() -> None:
     out_dir = pathlib.Path(args.out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
 
-    from benchmarks import adaptive, fig6, fig7, fig8, fleet, rpc, streaming, table2
+    from benchmarks import (
+        adaptive, fig6, fig7, fig8, fleet, net, rpc, streaming, table2,
+    )
 
     modules = {
         "fig6": fig6,
@@ -71,6 +73,7 @@ def main() -> None:
         "adaptive": adaptive,
         "fleet": fleet,
         "rpc": rpc,
+        "net": net,
     }
     if wanted:
         unknown = wanted - set(modules) - {"roofline"}

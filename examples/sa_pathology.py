@@ -165,17 +165,22 @@ def main() -> None:
                     help="WorkerBackend for the study's Manager session: "
                          "'thread' (default, in-process Workers) or "
                          "'process' — RPC worker processes pooling a "
-                         "SharedStore. Fast-path flags select per DESIGN.md "
-                         "§14, e.g. 'process[none]' or 'process[-shm]'")
+                         "SharedStore — or 'socket' — a TCP fleet "
+                         "(DESIGN.md §16) whose workers join by address, "
+                         "e.g. 'socket[store=obj:/data/sa]'. Fast-path "
+                         "flags select per DESIGN.md §14, e.g. "
+                         "'process[none]' or 'process[-shm]'")
     ap.add_argument("--hierarchy", default=None,
                     help="scheduler topology for the Manager session "
                          "(DESIGN.md §15): 'flat' (default, one pump), an "
                          "integer fan-out, 'auto', or a spec string like "
                          "'fanout=4,-steal,block=16'")
     args = ap.parse_args()
-    if args.backend != "thread" and not args.backend.startswith("process"):
-        ap.error(f"--backend must be 'thread' or 'process[...]', "
-                 f"got {args.backend!r}")
+    if args.backend != "thread" and not args.backend.startswith(
+        ("process", "socket")
+    ):
+        ap.error(f"--backend must be 'thread', 'process[...]' or "
+                 f"'socket[...]', got {args.backend!r}")
 
     if args.fleet > 0:
         run_fleet(args)
@@ -209,6 +214,18 @@ def main() -> None:
         backend = ProcessRpcBackend(
             build=pathology_rpc_build, build_kwargs={"images": tiles_np},
             **process_flag_kwargs(args.backend),
+        )
+    elif args.backend.startswith("socket"):
+        from repro.app.pipeline import pathology_rpc_build
+        from repro.runtime import SocketBackend, socket_flag_kwargs
+
+        kwargs = socket_flag_kwargs(args.backend)
+        kwargs.setdefault("store", args.store_dir)
+        if kwargs["store"] is None:
+            del kwargs["store"]  # backend owns a throwaway tempdir
+        backend = SocketBackend(
+            build=pathology_rpc_build, build_kwargs={"images": tiles_np},
+            **kwargs,
         )
 
     # reference masks first: the 1-run reference plan, streamed over all

@@ -242,6 +242,23 @@ def _backend_for(
             store_dir=store_dir,
             **process_flag_kwargs(backend),
         )
+    if isinstance(backend, str) and backend.startswith("socket"):
+        # "socket[...]" (DESIGN.md §16): TCP control plane; workers rebuild
+        # this study from the same spawn-picklable build. A store= token in
+        # the spec (e.g. store=obj:<root>) overrides store_dir so a fleet
+        # can run with no shared filesystem at all.
+        from repro.runtime import SocketBackend, socket_flag_kwargs
+
+        kwargs = socket_flag_kwargs(backend)
+        kwargs.setdefault("store", store_dir)
+        return SocketBackend(
+            build=pathology_rpc_build,
+            build_kwargs={
+                "images": [np.asarray(im) for im in images],
+                "costs": costs,
+            },
+            **kwargs,
+        )
     return backend
 
 
@@ -250,7 +267,7 @@ def _backend_cleanup(spec: Any, backend_obj: Any) -> None:
     tempdir store); caller-provided backends are untouched."""
     if (
         isinstance(spec, str)
-        and spec.startswith("process")
+        and (spec.startswith("process") or spec.startswith("socket"))
         and hasattr(backend_obj, "cleanup")
     ):
         backend_obj.cleanup()

@@ -8,6 +8,17 @@ from repro.runtime.hierarchy import (  # noqa: F401
     parse_hierarchy,
 )
 from repro.runtime.manager import Manager, WorkItem, run_study_distributed  # noqa: F401
+from repro.runtime.net import (  # noqa: F401
+    SocketBackend,
+    run_worker,
+    socket_flag_kwargs,
+)
+from repro.runtime.objstore import (  # noqa: F401
+    InMemoryObjectStore,
+    LocalFSObjectStore,
+    ObjectBackedStore,
+    ObjectStore,
+)
 from repro.runtime.transport import (  # noqa: F401
     Completion,
     Lease,
@@ -27,4 +38,8 @@ from repro.runtime.simulator import (  # noqa: F401
     simulate_cluster,
     simulate_stream,
 )
-from repro.runtime.storage import HierarchicalStore, SharedStore  # noqa: F401
+from repro.runtime.storage import (  # noqa: F401
+    HierarchicalStore,
+    SharedStore,
+    mount_store,
+)

@@ -57,7 +57,13 @@ try:  # advisory file locks are POSIX-only; SharedStore degrades gracefully
 except ImportError:  # pragma: no cover - non-POSIX
     fcntl = None  # type: ignore[assignment]
 
-__all__ = ["AsyncCommitQueue", "HierarchicalStore", "SharedStore", "stable_key"]
+__all__ = [
+    "AsyncCommitQueue",
+    "HierarchicalStore",
+    "SharedStore",
+    "mount_store",
+    "stable_key",
+]
 
 # Entry footer: | payload bytes | magic (8) | payload length (8, LE) |
 # sha256(payload) (32) |. The payload is a complete npz archive; loads slice
@@ -76,6 +82,40 @@ def stable_key(key: Any) -> str:
     unlike ``hash``. sha256 keeps filenames short and collision-free.
     """
     return hashlib.sha256(repr(key).encode()).hexdigest()
+
+
+def mount_store(
+    spec: Optional[str],
+    ram_bytes: int,
+    *,
+    writer_id: Optional[str] = None,
+) -> "HierarchicalStore":
+    """Resolve a store SPEC into a mounted cross-process store.
+
+    ``None`` or a plain directory path mounts the flock-coordinated
+    :class:`SharedStore` on that directory (the single-host default);
+    ``"obj:<root>"`` mounts the object-store tier — an
+    :class:`~repro.runtime.objstore.ObjectBackedStore` over a
+    :class:`~repro.runtime.objstore.LocalFSObjectStore` rooted at
+    ``<root>`` — which needs no shared filesystem semantics beyond the
+    object API (DESIGN.md §16). The spec is a plain string, so it crosses
+    spawn and TCP boundaries verbatim: RPC and socket workers mount
+    exactly the tier the leader named. Every mounted store exposes the
+    spec back as ``.disk_dir``, so a recorded mount re-resolves here.
+    """
+    if spec is not None and spec.startswith("obj:"):
+        from repro.runtime.objstore import LocalFSObjectStore, ObjectBackedStore
+
+        root = spec[len("obj:"):]
+        if not root:
+            raise ValueError(f"object store spec names no root: {spec!r}")
+        return ObjectBackedStore(
+            ram_bytes,
+            LocalFSObjectStore(root),
+            spec=spec,
+            writer_id=writer_id,
+        )
+    return SharedStore(ram_bytes, disk_dir=spec, writer_id=writer_id)
 
 
 def _serialise(v: Any) -> bytes:
@@ -260,10 +300,14 @@ class AsyncCommitQueue:
                 self._cond.wait(0.05)
         return True
 
-    def close(self, flush: bool = True) -> None:
-        """Retire the flusher; with ``flush`` (default) drains first."""
+    def close(self, flush: bool = True, timeout: Optional[float] = None) -> None:
+        """Retire the flusher; with ``flush`` (default) drains first.
+        ``timeout`` bounds the drain — a flusher wedged inside a hung store
+        write must not be able to hang a fleet teardown (the backend
+        ``shutdown`` path passes one; the entries it abandons are staged
+        pure values the lease-retry path can always recompute)."""
         if flush:
-            self.barrier()
+            self.barrier(timeout)
         with self._cond:
             self._closed = True
             self._cond.notify_all()
@@ -687,8 +731,19 @@ class SharedStore(HierarchicalStore):
             + "\n"
         )
         with self._flock(self._manifest_lockfile):
-            with open(self._manifest, "a") as f:
-                f.write(line)
+            with open(self._manifest, "a+b") as f:
+                # A writer killed mid-append can leave a TORN final line
+                # with no trailing newline. Appending straight after it
+                # would merge our valid record onto the torn fragment,
+                # producing one unparseable line — replay would then drop a
+                # GOOD commit record, not just the torn one. Terminate the
+                # fragment first so our record starts a fresh line.
+                end = f.seek(0, os.SEEK_END)
+                if end > 0:
+                    f.seek(end - 1)
+                    if f.read(1) != b"\n":
+                        f.write(b"\n")
+                f.write(line.encode())
                 f.flush()
                 os.fsync(f.fileno())
 

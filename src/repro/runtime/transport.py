@@ -245,6 +245,13 @@ def make_backend(spec: Any) -> "WorkerBackend":
     caller must construct it."""
     if spec is None or spec == "thread":
         return ThreadBackend()
+    if isinstance(spec, str) and spec.startswith("socket"):
+        # unlike "process", a socket backend IS constructible by name: the
+        # leader only listens — workers bring their own build context when
+        # they dial in (or the spec's spawn mode launches loopback workers)
+        from repro.runtime.net import SocketBackend, socket_flag_kwargs
+
+        return SocketBackend(**socket_flag_kwargs(spec))
     if isinstance(spec, str):
         raise ValueError(
             f"backend spec {spec!r} is not constructible from a name alone; "
@@ -755,10 +762,13 @@ class _RpcWorker:
         )
         try:
             spec = build(**(build_kwargs or {})) if build is not None else {}
-            from repro.runtime.storage import SharedStore
+            from repro.runtime.storage import mount_store
 
-            self.store = SharedStore(
-                store_ram_bytes, disk_dir=store_dir, writer_id=f"rpcw{worker_id}"
+            # store_dir is a SPEC: a plain directory mounts the flocked
+            # SharedStore, "obj:<root>" the object-store tier (§16) — the
+            # same string the leader mounted, shipped verbatim
+            self.store = mount_store(
+                store_dir, store_ram_bytes, writer_id=f"rpcw{worker_id}"
             )
             from repro.engine.executor import ResultCache
 
@@ -1177,6 +1187,27 @@ def _rpc_worker_main(
 # ---------------------------------------------------------------------------
 
 
+def stop_processes(procs, *, grace: float = 5.0) -> None:
+    """Bounded worker-process teardown, shared by the process and socket
+    backends: a cooperative join window of ``grace`` seconds for the whole
+    pool, then ``terminate()`` (SIGTERM) for laggards, then ``kill()``
+    (SIGKILL) for anything that ignores SIGTERM — a stuck worker (wedged in
+    an uninterruptible task, masking signals) can delay teardown by at most
+    ``grace + ~3s``, never hang it."""
+    deadline = time.monotonic() + max(0.0, grace)
+    for proc in procs:
+        proc.join(timeout=max(0.0, deadline - time.monotonic()))
+        if proc.is_alive():
+            proc.terminate()
+            proc.join(timeout=2.0)
+        if proc.is_alive():  # ignored SIGTERM: escalate
+            try:
+                proc.kill()
+            except (OSError, AttributeError):
+                pass
+            proc.join(timeout=1.0)
+
+
 class _WorkerHandle:
     __slots__ = ("wid", "proc", "conn", "alive", "last_seen", "inflight", "pid")
 
@@ -1232,6 +1263,7 @@ class ProcessRpcBackend:
         max_batch: int = 16,
         max_delay_ms: float = 2.0,
         shm_max_bytes: int = 64 << 20,
+        shutdown_grace: float = 5.0,
     ) -> None:
         from repro.engine.types import DEFAULT_CACHE_BYTES
 
@@ -1254,6 +1286,7 @@ class ProcessRpcBackend:
         self.max_batch = max(1, int(max_batch))
         self.max_delay_ms = float(max_delay_ms)
         self.shm_max_bytes = int(shm_max_bytes)
+        self.shutdown_grace = float(shutdown_grace)
         self._handles: List[_WorkerHandle] = []
         self._studies: List[Dict[str, Any]] = []  # replayed on (re)start
         self._store = None  # leader-side mount, lazy
@@ -1277,10 +1310,10 @@ class ProcessRpcBackend:
     @property
     def store(self):
         if self._store is None:
-            from repro.runtime.storage import SharedStore
+            from repro.runtime.storage import mount_store
 
-            self._store = SharedStore(
-                self.store_ram_bytes, disk_dir=self.store_dir, writer_id="rpc-leader"
+            self._store = mount_store(
+                self.store_dir, self.store_ram_bytes, writer_id="rpc-leader"
             )
         return self._store
 
@@ -1593,16 +1626,18 @@ class ProcessRpcBackend:
         return out
 
     def shutdown(self) -> None:
-        """Retire the pool: flush the staging tier, stop workers with a
-        bounded join (terminate → kill escalation for hung ones), then
-        sweep this session's transient state — store entries AND any
-        leftover shared-memory segments, so repeated runs can't leak
-        ``/dev/shm``."""
+        """Retire the pool: flush the staging tier (bounded — a wedged
+        store write cannot hang teardown), stop workers with a bounded
+        join (terminate → kill escalation for hung ones, so
+        ``Manager.close()`` can never hang a fleet teardown), then sweep
+        this session's transient state — store entries AND any leftover
+        shared-memory segments, so repeated runs can't leak ``/dev/shm``."""
         if self._flusher is not None:
             # staged-but-unflushed completions reach disk before the
-            # flusher retires; a poisoned entry is dropped, never hangs
+            # flusher retires; a poisoned entry is dropped, a wedged one
+            # abandoned at the deadline — neither hangs
             try:
-                self._flusher.close(flush=True)
+                self._flusher.close(flush=True, timeout=self.shutdown_grace * 2)
             except BaseException:  # noqa: BLE001
                 pass
             self._flusher = None
@@ -1612,18 +1647,8 @@ class ProcessRpcBackend:
                     _send_frame(h.conn, self._lock, {"t": "stop"})
                 except (OSError, ValueError, BrokenPipeError):
                     pass
-        deadline = time.monotonic() + 5.0
+        stop_processes([h.proc for h in self._handles], grace=self.shutdown_grace)
         for h in self._handles:
-            h.proc.join(timeout=max(0.0, deadline - time.monotonic()))
-            if h.proc.is_alive():
-                h.proc.terminate()
-                h.proc.join(timeout=2.0)
-            if h.proc.is_alive():  # ignored SIGTERM: escalate
-                try:
-                    h.proc.kill()
-                except (OSError, AttributeError):
-                    pass
-                h.proc.join(timeout=1.0)
             try:
                 h.conn.close()
             except OSError:

@@ -32,6 +32,7 @@ exactly that against a one-shot oracle.
 from __future__ import annotations
 
 import multiprocessing
+import os
 import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -458,13 +459,17 @@ def _fleet_worker_init(
     persistent Manager session and store-backed cache — alive across every
     round this worker serves."""
     from repro.engine.types import DEFAULT_CACHE_BYTES
-    from repro.runtime.storage import SharedStore
+    from repro.runtime.storage import mount_store
 
     # a raising Pool initializer makes the pool respawn workers forever;
     # park the failure and surface it on the first shard instead
     try:
         spec = build(**(build_kwargs or {}))
-        store = SharedStore(store_ram_bytes, disk_dir=store_dir)
+        # store_dir is a SPEC: plain directory → flocked SharedStore,
+        # "obj:<root>" → object-store tier (no shared filesystem needed)
+        store = mount_store(
+            store_dir, store_ram_bytes, writer_id=f"fleetw{os.getpid()}"
+        )
         state = StudyState(
             spec["space"],
             seed=seed,
@@ -558,13 +563,14 @@ def run_fleet_study(
     # failing deep inside Pool creation.
     if not (
         worker_backend is None
-        or worker_backend == "thread"
+        or isinstance(worker_backend, str)
         or (callable(worker_backend) and not hasattr(worker_backend, "offer"))
     ):
         raise ValueError(
-            "worker_backend must be None, 'thread', or a spawn-picklable "
-            "factory callable returning a WorkerBackend; a constructed "
-            "backend instance cannot cross the fleet's spawn boundary"
+            "worker_backend must be None, a backend spec string ('thread', "
+            "'process[...]', 'socket[...]'), or a spawn-picklable factory "
+            "callable returning a WorkerBackend; a constructed backend "
+            "instance cannot cross the fleet's spawn boundary"
         )
     # the leader never evaluates (its evaluate_delta hook farms every delta
     # out), so a build that offers a ``leader`` flag may skip constructing
@@ -576,9 +582,9 @@ def run_fleet_study(
         leader_kwargs["leader"] = True
     spec = build(**leader_kwargs)
     from repro.engine.types import DEFAULT_CACHE_BYTES
-    from repro.runtime.storage import SharedStore
+    from repro.runtime.storage import mount_store
 
-    store = SharedStore(store_ram_bytes, disk_dir=store_dir)
+    store = mount_store(store_dir, store_ram_bytes, writer_id="fleet-leader")
     state = StudyState(
         spec["space"],
         seed=seed,

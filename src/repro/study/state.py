@@ -114,7 +114,17 @@ class StudyState:
         # silently serve the old inputs' cached results.
         self.input_keys: Optional[List[Any]] = None
         # --- runtime (rebuilt on load, never serialised) ---
-        self.store = store or HierarchicalStore(store_ram_bytes, disk_dir=store_dir)
+        if store is not None:
+            self.store = store
+        elif store_dir is not None and str(store_dir).startswith("obj:"):
+            # "obj:<root>" mounts the object-store tier (§16); ``save``
+            # records ``store.disk_dir`` — the spec itself — so a resumed
+            # study remounts the same object root with zero recompute
+            from repro.runtime.storage import mount_store
+
+            self.store = mount_store(store_dir, store_ram_bytes, writer_id="study")
+        else:
+            self.store = HierarchicalStore(store_ram_bytes, disk_dir=store_dir)
         self.cache = ResultCache(self.cache_bytes, spill_store=self.store)
         self.ledger = TrieLedger()
         self.manager: Optional[Manager] = None

@@ -298,6 +298,32 @@ class TestSharedStore:
         s2 = SharedStore(1 << 20, disk_dir=str(tmp_path))
         assert s2.committed_keys() == {"a"}
 
+    def test_append_after_truncated_tail_does_not_poison_replay(self, tmp_path):
+        """Crash mid-append leaves a partial final line WITHOUT a newline;
+        the next writer's append must repair the tail (terminate the torn
+        line) instead of concatenating onto it — otherwise the torn bytes
+        swallow the NEW record and replay loses a committed key."""
+        s1 = SharedStore(1 << 20, disk_dir=str(tmp_path), writer_id="w1")
+        s1.put("a", np.ones(8, np.float32))
+        s1.persist("a")
+        manifest = tmp_path / "manifest.jsonl"
+        with open(manifest, "a") as f:
+            f.write('{"key": "torn-half')  # killed mid-append, no newline
+        s2 = SharedStore(1 << 20, disk_dir=str(tmp_path), writer_id="w2")
+        s2.put("b", np.zeros(8, np.float32))
+        s2.persist("b")
+        assert s2.committed_keys() == {"a", "b"}
+        records = s2.manifest_records()
+        assert records["b"]["writer"] == "w2"
+        # replay across a fresh mount agrees (the repair is on disk)
+        s3 = SharedStore(1 << 20, disk_dir=str(tmp_path))
+        assert s3.committed_keys() == {"a", "b"}
+        # the torn line was terminated, not extended: three distinct lines,
+        # with the partial one isolated in the middle
+        lines = manifest.read_text().splitlines()
+        assert len(lines) == 3
+        assert lines[1] == '{"key": "torn-half'
+
     def test_quarantined_entry_recommitted_after_recompute(self, tmp_path):
         s1 = SharedStore(1 << 20, disk_dir=str(tmp_path), writer_id="w1")
         s1.put("x", np.ones(8, np.float32))

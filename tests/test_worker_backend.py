@@ -33,7 +33,13 @@ import pytest
 
 from repro.engine import ClusterSpec, execute_study, plan_study
 from repro.engine.types import CACHING_POLICIES, POLICIES
-from repro.runtime import Manager, ProcessRpcBackend, RemoteTaskError, WorkItem
+from repro.runtime import (
+    Manager,
+    ProcessRpcBackend,
+    RemoteTaskError,
+    SocketBackend,
+    WorkItem,
+)
 from repro.study import StudyDriver
 
 from study_gen import (
@@ -67,6 +73,18 @@ def _hang_until_killed(marker_dir):
         time.sleep(60.0)
         return "hung"
     return "fast"
+
+
+def _wedge_worker_process(marker_dir):
+    """Worst-case teardown adversary: the TASK completes normally, but it
+    leaves the worker process unable to exit — a non-daemon thread parked
+    far past any test budget — and shrugs off SIGTERM. The stop frame ends
+    the serve loop, then interpreter exit blocks joining the thread: only
+    shutdown's terminate→KILL escalation can retire this process."""
+    signal.signal(signal.SIGTERM, signal.SIG_IGN)
+    threading.Thread(target=time.sleep, args=(300.0,), daemon=False).start()
+    (pathlib.Path(marker_dir) / "stuck_pid").write_text(str(os.getpid()))
+    return "wedged"
 
 
 def _slow_once(marker_dir):
@@ -144,6 +162,18 @@ def test_policy_matrix_bit_identical_across_backends(tmp_path):
         build_kwargs={"layout": layout, "inputs": inputs},
         enable_backup_tasks=False,
     )
+    # third row of the matrix: a loopback TCP fleet over the object-store
+    # tier — no shared working directory beyond the store root (§16)
+    sock_mgr = Manager(
+        backend=SocketBackend(
+            build=mix_study_build,
+            build_kwargs={"layout": layout, "inputs": inputs},
+            store="obj:" + str(tmp_path / "objroot"),
+            heartbeat_interval=0.05,
+        ),
+        enable_backup_tasks=False,
+    )
+    sock_mgr.start(2)
     try:
         for policy in POLICIES:
             plan = plan_study(wf, sets, policy=policy, max_bucket_size=3)
@@ -154,14 +184,21 @@ def test_policy_matrix_bit_identical_across_backends(tmp_path):
             proc_stream = execute_study(
                 plan, inputs, manager=mgr, key_prefix=f"{policy}:"
             )
+            sock_stream = execute_study(
+                plan, inputs, manager=sock_mgr, key_prefix=f"{policy}:"
+            )
             assert proc_stream.backend == "process"
             assert thread_stream.backend == "thread"
+            assert sock_stream.backend == "socket"
             assert sum(proc_stream.dispatch_counts.values()) > 0
+            assert sum(sock_stream.dispatch_counts.values()) > 0
             for i in range(len(inputs)):
                 assert thread_stream.outputs[i] == oracles[i], (policy, i)
                 assert proc_stream.outputs[i] == oracles[i], (policy, i)
+                assert sock_stream.outputs[i] == oracles[i], (policy, i)
     finally:
         mgr.close()
+        sock_mgr.close()
 
 
 def test_results_cross_the_boundary_only_as_store_keys(tmp_path):
@@ -284,6 +321,63 @@ def test_sa_indices_bit_identical_thread_vs_process(tmp_path, policy):
     assert any(store_dir.glob("*.npz")), "worker caches never flushed"
 
 
+def test_sa_indices_bit_identical_thread_vs_socket(tmp_path):
+    """The full adaptive loop over a TCP fleet + object store: indices,
+    CIs, decisions and the active set must equal the thread run exactly —
+    the multi-host acceptance row of ISSUE 8 (here on loopback)."""
+    rng = random.Random(7042)
+    layout = [
+        [("s0t0", (), 1.0, 64)],
+        [
+            ("s1t0", ("p0",), 1.0, 64),
+            ("s1t1", ("p1",), 1.0, 64),
+            ("s1t2", ("p2",), 1.0, 64),
+        ],
+    ]
+    from repro.core import ParamSpace
+
+    space = ParamSpace.from_dict({f"p{i}": [0, 1, 2] for i in range(3)})
+    inputs = [rng.randrange(1000)]
+
+    def run(backend):
+        driver = StudyDriver(
+            workflow_from_layout(layout),
+            space,
+            inputs,
+            objective=_objective,
+            seed=5,
+            engine_policy="hybrid",
+            cluster=ClusterSpec(n_workers=2),
+            n_boot=8,
+            backend=backend,
+        )
+        try:
+            return driver.run(max_rounds=2)
+        finally:
+            driver.close()
+
+    thread_state = run(None)
+    sock_state = run(
+        SocketBackend(
+            build=mix_study_build,
+            build_kwargs={"layout": layout, "inputs": inputs},
+            store="obj:" + str(tmp_path / "objroot"),
+            heartbeat_interval=0.05,
+        )
+    )
+    assert sock_state.evaluated == thread_state.evaluated
+    assert len(sock_state.rounds) == len(thread_state.rounds) == 2
+    for sr, tr in zip(sock_state.rounds, thread_state.rounds):
+        assert sr.outputs == tr.outputs
+        assert sr.analysis == tr.analysis  # indices + CIs, exact floats
+        assert sr.decision == tr.decision
+    assert sock_state.active == thread_state.active
+    # the fleet's durable artifacts live under the object root as
+    # footer-verified entries/ objects — no .npz scatter, no flocks
+    entries = tmp_path / "objroot" / "entries"
+    assert entries.is_dir() and any(entries.iterdir())
+
+
 # ---------------------------------------------------------------------------
 # Fault tolerance across the process boundary
 # ---------------------------------------------------------------------------
@@ -323,6 +417,55 @@ def test_killed_worker_lease_reenqueued_and_completed_by_survivor(tmp_path):
         assert victim_pid in mgr.backend.worker_pids()
     finally:
         mgr.close()
+
+
+def test_shutdown_bounded_even_with_stuck_worker(tmp_path):
+    """``Manager.close()`` can never hang a fleet teardown: a worker whose
+    process cannot exit after the stop frame (wedged by a non-daemon
+    thread, SIGTERM ignored) is joined with a deadline, terminated, then
+    KILLED at the escalation deadline — close returns in bounded
+    wall-clock time and no worker process survives it. (Before the bound,
+    shutdown's unconditional ``proc.join()`` waited on this forever.)"""
+    marker_dir = tmp_path / "marker"
+    marker_dir.mkdir()
+    mgr = Manager(
+        backend=ProcessRpcBackend(
+            store_dir=str(tmp_path / "store"),
+            heartbeat_interval=0.05,
+            shutdown_grace=0.5,
+        ),
+        enable_backup_tasks=False,
+    )
+    mgr.start(2)
+    closed = False
+    try:
+        mgr.submit(
+            WorkItem(key="wedge", spec=("call", _wedge_worker_process,
+                                        (str(marker_dir),), {}))
+        )
+        mgr.drain()  # the task itself completes fine
+        assert mgr.results()["wedge"] == "wedged"
+        pids = list(mgr.backend.worker_pids())
+        t0 = time.monotonic()
+        mgr.close()
+        closed = True
+        elapsed = time.monotonic() - t0
+        # grace 0.5s + terminate(2s) + kill(1s) escalation windows, with
+        # slack for process-table churn — far below the hung-join forever
+        assert elapsed < 15.0, f"teardown took {elapsed:.1f}s"
+        for pid in pids:
+            deadline = time.monotonic() + 5
+            while time.monotonic() < deadline:
+                try:
+                    os.kill(pid, 0)
+                except ProcessLookupError:
+                    break  # reaped
+                time.sleep(0.05)
+            else:
+                pytest.fail(f"worker {pid} survived shutdown")
+    finally:
+        if not closed:
+            mgr.close()
 
 
 def test_transient_remote_failures_retry_to_success(tmp_path):
