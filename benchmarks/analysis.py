@@ -1,0 +1,39 @@
+"""Static-analysis gate as a benchmark module (DESIGN.md §17) —
+``BENCH_analysis.json``.
+
+Runs the four-pass AST suite (lock discipline + ordering, blocking-under-
+lock, wire-frame conformance, spawn/determinism) over ``src/repro`` and
+reports wall time per file plus the findings tally. A tree that is not
+clean under ``--strict`` semantics (any unsuppressed finding, or a stale
+baseline entry) fails the module — and therefore the harness — exactly
+like the CI ``analysis-smoke`` job.
+
+Pure stdlib on purpose: this module must stay importable and runnable in
+an environment with no jax/numpy, so the gate can run first and fastest.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+
+def run(csv: List[str]) -> None:
+    from repro.analysis import run_paths
+
+    t0 = time.time()
+    report = run_paths()
+    dt = time.time() - t0
+    per_file_us = dt * 1e6 / max(1, report.files)
+    csv.append(
+        f"analysis_strict,{per_file_us:.0f},"
+        f"files={report.files}"
+        f"_findings={len(report.findings)}"
+        f"_suppressed={report.suppressed}"
+        f"_baselined={len(report.baselined)}"
+        f"_stale={len(report.stale)}"
+    )
+    if not report.strict_ok:
+        raise AssertionError(
+            "static-analysis gate failed:\n" + report.render()
+        )

@@ -8,9 +8,14 @@ traceback) and makes the harness exit non-zero after the remaining modules
 finish.
 
 Run: PYTHONPATH=src python -m benchmarks.run
-     [--only fig6,fig7,table2,fig8,streaming,adaptive,fleet,rpc,net] [--out-dir DIR]
+     [--only fig6,fig7,table2,fig8,streaming,adaptive,fleet,rpc,net,analysis]
+     [--out-dir DIR]
      [--quick]   (the CI smoke profile: shrinks sizes, same pipeline;
                   equivalent to REPRO_BENCH_SMOKE=1)
+
+Modules are imported lazily, one by one, so a selection that needs no
+accelerator stack (``--only analysis``, the static-analysis gate) runs in
+a bare environment without jax installed.
 """
 
 from __future__ import annotations
@@ -42,7 +47,10 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list: fig6,fig7,table2,fig8,streaming,adaptive,fleet,rpc,net",
+        help=(
+            "comma list: fig6,fig7,table2,fig8,streaming,adaptive,fleet,"
+            "rpc,net,analysis"
+        ),
     )
     ap.add_argument(
         "--out-dir", default=".", help="where BENCH_<module>.json artifacts land"
@@ -60,34 +68,28 @@ def main() -> None:
     out_dir = pathlib.Path(args.out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
 
-    from benchmarks import (
-        adaptive, fig6, fig7, fig8, fleet, net, rpc, streaming, table2,
-    )
-
-    modules = {
-        "fig6": fig6,
-        "fig7": fig7,
-        "table2": table2,
-        "fig8": fig8,
-        "streaming": streaming,
-        "adaptive": adaptive,
-        "fleet": fleet,
-        "rpc": rpc,
-        "net": net,
-    }
+    # names only — each module is imported when (and only when) selected,
+    # so jax-free selections (--only analysis) run in a bare environment
+    module_names = [
+        "analysis", "fig6", "fig7", "table2", "fig8", "streaming",
+        "adaptive", "fleet", "rpc", "net",
+    ]
     if wanted:
-        unknown = wanted - set(modules) - {"roofline"}
+        unknown = wanted - set(module_names) - {"roofline"}
         if unknown:
             ap.error(f"unknown modules in --only: {sorted(unknown)}")
+    import importlib
+
     csv: List[str] = ["name,us_per_call,derived"]
     failed: List[str] = []
-    for name, mod in modules.items():
+    for name in module_names:
         if wanted and name not in wanted:
             continue
         t0 = time.time()
         start = len(csv)
         payload = {"module": name, "ok": True}
         try:
+            mod = importlib.import_module(f"benchmarks.{name}")
             mod.run(csv)
             print(f"# {name}: ok ({time.time()-t0:.1f}s)", file=sys.stderr)
         except Exception:  # noqa: BLE001

@@ -1,0 +1,32 @@
+"""repro.analysis — the concurrency & protocol static-analysis suite
+(DESIGN.md §17).
+
+Four AST passes, each targeting a bug class this repo has actually
+shipped and fixed by hand in an earlier PR:
+
+* ``locks``     — lock discipline (``# guard:`` declarations + inference)
+                  and, project-wide, the lock-acquisition-ordering graph.
+* ``blocking``  — file/socket I/O, store commits, ``time.sleep`` inside a
+                  held-lock region, one call level deep.
+* ``frames``    — wire-frame tag/field conformance between every
+                  ``_send_frame`` producer and consumer site.
+* ``spawn``     — spawn-boundary picklability and result-key/recipe
+                  determinism.
+
+Run ``python -m repro.analysis --strict`` (the CI gate), or
+``repro.analysis.runner.run_paths()`` programmatically.  Pure stdlib: safe
+to run without jax installed.
+"""
+
+from .core import Baseline, Finding, SourceFile, source_from_text
+from .runner import Report, run_paths, run_sources
+
+__all__ = [
+    "Baseline",
+    "Finding",
+    "Report",
+    "SourceFile",
+    "run_paths",
+    "run_sources",
+    "source_from_text",
+]

@@ -1,0 +1,72 @@
+"""CLI: ``python -m repro.analysis [--strict] [paths...]``.
+
+Exit status: 0 when clean; 1 on unsuppressed findings (always) or on stale
+baseline entries (``--strict`` only — strict is the CI gate and insists the
+baseline stays minimal).
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from .core import Baseline
+from .runner import default_baseline_path, default_target, run_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro concurrency/protocol static-analysis suite "
+        "(DESIGN.md §17)",
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        type=pathlib.Path,
+        help=f"files/dirs to analyze (default: {default_target()})",
+    )
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="also fail on stale baseline entries (the CI gate)",
+    )
+    ap.add_argument(
+        "--baseline",
+        type=pathlib.Path,
+        default=None,
+        help=f"findings baseline (default: {default_baseline_path()})",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="rewrite the baseline to exactly today's findings "
+        "(reasons must then be filled in by hand — entries are written "
+        "with reason 'TODO: justify' and strict mode rejects them)",
+    )
+    args = ap.parse_args(argv)
+
+    baseline_path = args.baseline or default_baseline_path()
+    report = run_paths(args.paths or None, baseline_path=baseline_path)
+
+    if args.write_baseline:
+        old = Baseline.load(baseline_path)
+        entries = {}
+        for f in report.findings + report.baselined:
+            entries[f.fingerprint] = old.entries.get(f.fingerprint, "TODO: justify")
+        Baseline(entries).dump(baseline_path)
+        print(f"wrote {len(entries)} entries to {baseline_path}")
+        return 0
+
+    out = report.render()
+    print(out)
+    if report.findings:
+        return 1
+    if args.strict and not report.strict_ok:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

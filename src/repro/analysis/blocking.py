@@ -1,0 +1,177 @@
+"""Pass 2 — blocking calls inside a held-lock region.
+
+Flags file/socket I/O, ``os.replace``/``fsync``, store commits,
+``time.sleep``, thread joins, and ``Connection.send/recv``-style calls that
+are reachable while a lock is syntactically held — either directly or one
+call level deep (``with self._lock: self._spill(...)`` where ``_spill``
+performs the I/O).
+
+Codes:
+  B401  blocking call directly inside a held-lock region
+  B402  call inside a held-lock region reaches a blocking call (1 level)
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from .core import Finding, SourceFile
+from .lockmodel import ClassModel, HeldWalker, ModuleModel, collect_module
+
+__all__ = ["run"]
+
+PASS_ID = "blocking"
+
+_OS_ATTRS = {
+    "replace", "fsync", "link", "rename", "fdopen", "open",
+    "remove", "unlink", "makedirs", "urandom",
+}
+_CONN_ATTRS = {
+    "send_bytes", "recv_bytes", "sendall", "recv", "send",
+    "accept", "connect", "listen",
+}
+_PATH_ATTRS = {
+    "read_bytes", "read_text", "write_text", "write_bytes",
+    "mkdir", "iterdir", "rmdir", "touch", "unlink", "glob", "rglob",
+}
+_COMMIT_ATTRS = {"persist", "persist_all", "flush", "commit", "barrier"}
+_NP_ATTRS = {"load", "save", "savez", "savez_compressed"}
+_BARE_NAMES = {"_send_frame", "_recv_frame", "sleep"}
+
+
+def blocking_desc(call: ast.Call) -> Optional[str]:
+    fn = call.func
+    if isinstance(fn, ast.Name):
+        if fn.id == "open":
+            return "open()"
+        if fn.id in _BARE_NAMES:
+            return f"{fn.id}()"
+        return None
+    if not isinstance(fn, ast.Attribute):
+        return None
+    attr = fn.attr
+    base = fn.value
+    base_name = base.id if isinstance(base, ast.Name) else None
+    if base_name == "time" and attr in ("sleep",):
+        return "time.sleep()"
+    if base_name == "os" and attr in _OS_ATTRS:
+        return f"os.{attr}()"
+    if base_name == "select" and attr == "select":
+        return "select.select()"
+    if base_name == "fcntl" and attr in ("flock", "lockf"):
+        return f"fcntl.{attr}()"
+    if base_name in ("np", "numpy") and attr in _NP_ATTRS:
+        return f"{base_name}.{attr}()"
+    if attr == "sleep":
+        return f".{attr}()"
+    if attr in _CONN_ATTRS:
+        return f".{attr}()"
+    if attr in _PATH_ATTRS:
+        return f".{attr}()"
+    if attr in _COMMIT_ATTRS:
+        return f".{attr}()"
+    if attr == "join" and not isinstance(base, ast.Constant):
+        # thread/process join; "sep".join(...) has a Constant base
+        return ".join()"
+    return None
+
+
+def _iter_skip_defs(node: ast.AST):
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        yield child
+        yield from _iter_skip_defs(child)
+
+
+def _callee_blocking(
+    target: ast.FunctionDef,
+) -> Optional[Tuple[str, int]]:
+    """First direct blocking call in a function body (nested defs skipped)."""
+    for stmt in target.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for node in _iter_skip_defs(stmt):
+            if isinstance(node, ast.Call):
+                desc = blocking_desc(node)
+                if desc:
+                    return desc, node.lineno
+        if isinstance(stmt, ast.Call):  # bare expression call
+            desc = blocking_desc(stmt)
+            if desc:
+                return desc, stmt.lineno
+    return None
+
+
+def _resolve_local_call(
+    mod: ModuleModel, cls: Optional[ClassModel], call: ast.Call
+) -> Optional[Tuple[str, ast.FunctionDef]]:
+    fn = call.func
+    if isinstance(fn, ast.Name) and fn.id in mod.functions:
+        return fn.id, mod.functions[fn.id]
+    if (
+        isinstance(fn, ast.Attribute)
+        and isinstance(fn.value, ast.Name)
+        and fn.value.id == "self"
+        and cls is not None
+        and fn.attr in cls.methods
+    ):
+        return f"{cls.name}.{fn.attr}", cls.methods[fn.attr]
+    return None
+
+
+def run(src: SourceFile, mod: Optional[ModuleModel] = None) -> List[Finding]:
+    mod = mod or collect_module(src)
+    findings: List[Finding] = []
+    fns: List[Tuple[Optional[ClassModel], ast.FunctionDef]] = [
+        (None, fn) for fn in mod.functions.values()
+    ]
+    for cls in mod.classes.values():
+        fns.extend((cls, m) for m in cls.methods.values())
+
+    for cls, fn in fns:
+        where = f"{cls.name}.{fn.name}" if cls else fn.name
+        walker = HeldWalker(mod, cls, fn)
+        if walker.exempt:
+            continue
+        seen: set = set()
+        for node, held in walker.walk():
+            if not held or not isinstance(node, ast.Call) or id(node) in seen:
+                continue
+            seen.add(id(node))
+            lock = sorted(held)[0]
+            desc = blocking_desc(node)
+            if desc:
+                findings.append(
+                    Finding(
+                        PASS_ID,
+                        "B401",
+                        src.rel,
+                        node.lineno,
+                        f"blocking call {desc} while holding {lock} in {where}()",
+                        f"{where}:{desc}",
+                    )
+                )
+                continue
+            resolved = _resolve_local_call(mod, cls, node)
+            if resolved is None:
+                continue
+            tname, target = resolved
+            # a callee that itself acquires the lock is a lock-region, not a
+            # blocking leaf — still scanned: its body I/O is under its lock
+            inner = _callee_blocking(target)
+            if inner:
+                idesc, iline = inner
+                findings.append(
+                    Finding(
+                        PASS_ID,
+                        "B402",
+                        src.rel,
+                        node.lineno,
+                        f"{tname}() called while holding {lock} in {where}() "
+                        f"reaches blocking {idesc} (line {iline})",
+                        f"{where}:{tname}:{idesc}",
+                    )
+                )
+    return findings

@@ -1,0 +1,254 @@
+"""Shared infrastructure for the repro static-analysis suite (DESIGN.md §17).
+
+The suite is pure stdlib (``ast`` + ``tokenize``-free line scanning): it must
+run in the leanest CI job and inside ``benchmarks/run.py`` without importing
+jax or the runtime under analysis.
+
+Three cross-cutting conventions live here:
+
+``# guard: <lock>``
+    On an attribute assignment (normally in ``__init__``): declares that the
+    attribute is protected by the named lock attribute of the same class (or,
+    at module scope, by the named module-level lock).  A class with at least
+    one declaration runs the lock-discipline pass in *declared* mode —
+    inference is off and exactly the declared set is checked.
+
+``# holds: <lock>``
+    On a ``def`` line: the function is only ever called with that lock held
+    (the repo-wide ``*_locked`` naming convention is recognised implicitly
+    and means "all locks of the owning class").
+
+``# analysis: ok[<pass-or-code>, ...] <reason>``
+    Inline suppression.  Placed on the flagged line (or on a pure-comment
+    line directly above it) it waives the finding; ``ok[all]`` waives every
+    pass.  Deliberate design points (e.g. the frame-send serialization lock)
+    are suppressed inline so the baseline file stays empty of routine
+    entries.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = [
+    "Finding",
+    "SourceFile",
+    "Baseline",
+    "load_source",
+    "source_from_text",
+    "iter_py_files",
+    "is_suppressed",
+    "parent_map",
+    "guard_comment",
+    "holds_comment",
+    "frame_consumer_comments",
+]
+
+_SUPPRESS_RE = re.compile(r"#\s*analysis:\s*ok\[([A-Za-z0-9_,\- ]+)\]")
+_GUARD_RE = re.compile(r"#\s*guard:\s*([A-Za-z_][A-Za-z0-9_]*)")
+_HOLDS_RE = re.compile(r"#\s*holds:\s*([A-Za-z_][A-Za-z0-9_]*)")
+_CONSUMER_RE = re.compile(
+    r"#\s*frame-consumer:\s*([A-Za-z0-9_,\- ]+?)\s+via\s+([A-Za-z_][A-Za-z0-9_]*)"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic. ``subject`` is the line-drift-tolerant identity used
+    for baselining; ``line`` is presentation only."""
+
+    pass_id: str  # locks | ordering | blocking | frames | spawn
+    code: str  # e.g. L201
+    path: str  # repo-relative posix path of the analyzed file
+    line: int
+    message: str
+    subject: str
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.pass_id}:{self.path}:{self.code}:{self.subject}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} [{self.pass_id}] {self.message}"
+
+
+@dataclasses.dataclass
+class SourceFile:
+    path: Optional[pathlib.Path]
+    rel: str  # stable identity used in findings/baseline
+    text: str
+    lines: List[str]
+    tree: ast.Module
+
+
+def source_from_text(text: str, rel: str = "<fixture>") -> SourceFile:
+    """Build a SourceFile from an in-memory snippet (self-test fixtures)."""
+    return SourceFile(
+        path=None,
+        rel=rel,
+        text=text,
+        lines=text.splitlines(),
+        tree=ast.parse(text),
+    )
+
+
+def load_source(path: pathlib.Path, root: Optional[pathlib.Path]) -> SourceFile:
+    text = path.read_text()
+    try:
+        rel = path.resolve().relative_to(root.resolve()).as_posix() if root else None
+    except ValueError:
+        rel = None
+    return SourceFile(
+        path=path,
+        rel=rel or path.as_posix(),
+        text=text,
+        lines=text.splitlines(),
+        tree=ast.parse(text, filename=str(path)),
+    )
+
+
+def iter_py_files(paths: Sequence[pathlib.Path]) -> List[pathlib.Path]:
+    out: List[pathlib.Path] = []
+    for p in paths:
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            out.append(p)
+    seen: Set[pathlib.Path] = set()
+    uniq = []
+    for p in out:
+        rp = p.resolve()
+        if rp not in seen:
+            seen.add(rp)
+            uniq.append(p)
+    return uniq
+
+
+def _line(src: SourceFile, lineno: int) -> str:
+    if 1 <= lineno <= len(src.lines):
+        return src.lines[lineno - 1]
+    return ""
+
+
+def is_suppressed(src: SourceFile, finding: Finding) -> bool:
+    """True when the flagged line (or the contiguous pure-comment block
+    right above it) carries an ``# analysis: ok[...]`` waiver naming the
+    pass or code."""
+
+    def waives(text: str) -> bool:
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            return False
+        names = {t.strip() for t in m.group(1).split(",")}
+        return "all" in names or finding.pass_id in names or finding.code in names
+
+    if waives(_line(src, finding.line)):
+        return True
+    lineno = finding.line - 1
+    while lineno >= 1:
+        text = _line(src, lineno)
+        if not text.strip() or not text.lstrip().startswith("#"):
+            break
+        if waives(text):
+            return True
+        lineno -= 1
+    return False
+
+
+def guard_comment(src: SourceFile, lineno: int) -> Optional[str]:
+    m = _GUARD_RE.search(_line(src, lineno))
+    return m.group(1) if m else None
+
+
+def holds_comment(src: SourceFile, lineno: int) -> Optional[str]:
+    m = _HOLDS_RE.search(_line(src, lineno))
+    return m.group(1) if m else None
+
+
+def frame_consumer_comments(src: SourceFile, fn: ast.AST) -> List[Tuple[List[str], str]]:
+    """``frame-consumer: tag1,tag2 via msg`` comment annotations attached
+    to a function: searched on the def line and every line of the body."""
+    out: List[Tuple[List[str], str]] = []
+    end = getattr(fn, "end_lineno", fn.lineno)
+    for lineno in range(fn.lineno, end + 1):
+        m = _CONSUMER_RE.search(_line(src, lineno))
+        if m:
+            tags = [t.strip() for t in m.group(1).split(",") if t.strip()]
+            out.append((tags, m.group(2)))
+    return out
+
+
+def parent_map(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+class Baseline:
+    """The findings baseline: fingerprints of known, justified findings.
+
+    Every entry must carry a non-empty ``reason`` — the loader rejects
+    unexplained entries, which is how "the baseline ships empty of
+    unexplained entries" is enforced mechanically rather than by review.
+    """
+
+    def __init__(self, entries: Optional[Dict[str, str]] = None) -> None:
+        self.entries: Dict[str, str] = dict(entries or {})
+
+    @classmethod
+    def load(cls, path: pathlib.Path) -> "Baseline":
+        if not path.exists():
+            return cls()
+        data = json.loads(path.read_text() or "{}")
+        entries: Dict[str, str] = {}
+        for row in data.get("entries", []):
+            fp = row.get("fingerprint", "")
+            reason = (row.get("reason") or "").strip()
+            if not fp:
+                raise ValueError(f"baseline {path}: entry without fingerprint: {row!r}")
+            if not reason:
+                raise ValueError(
+                    f"baseline {path}: unexplained entry (empty reason): {fp}"
+                )
+            entries[fp] = reason
+        return cls(entries)
+
+    def dump(self, path: pathlib.Path) -> None:
+        rows = [
+            {"fingerprint": fp, "reason": reason}
+            for fp, reason in sorted(self.entries.items())
+        ]
+        path.write_text(json.dumps({"entries": rows}, indent=1) + "\n")
+
+    def split(
+        self, findings: Sequence[Finding]
+    ) -> Tuple[List[Finding], List[Finding], List[str]]:
+        """-> (unsuppressed, baselined, stale_fingerprints)."""
+        seen: Set[str] = set()
+        fresh: List[Finding] = []
+        known: List[Finding] = []
+        for f in findings:
+            if f.fingerprint in self.entries:
+                seen.add(f.fingerprint)
+                known.append(f)
+            else:
+                fresh.append(f)
+        stale = sorted(set(self.entries) - seen)
+        return fresh, known, stale
+
+
+def dedupe(findings: Iterable[Finding]) -> List[Finding]:
+    """Collapse repeated fingerprints, keeping the earliest line."""
+    best: Dict[str, Finding] = {}
+    for f in findings:
+        cur = best.get(f.fingerprint)
+        if cur is None or f.line < cur.line:
+            best[f.fingerprint] = f
+    return sorted(best.values(), key=lambda f: (f.path, f.line, f.code))

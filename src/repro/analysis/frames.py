@@ -1,0 +1,392 @@
+"""Pass 3 — wire-frame conformance.
+
+The socket and process transports exchange length-prefixed pickle frames:
+plain dicts tagged by a ``"t"`` key.  This pass extracts, from every
+producer site (a dict literal whose ``"t"`` is a string constant, with
+``**base`` splats resolved against same-function dict assignments) and
+every consumer site (an ``if kind == "tag":`` branch over a variable bound
+from ``msg.get("t")``/``msg["t"]``, following the message one call level
+deep, plus explicit ``# frame-consumer: tag via msg`` annotations), the
+frame tags and field sets in play — then cross-checks sender/receiver
+agreement so schema drift between backends is a lint error, not a fleet
+hang.
+
+Field requirement rules: ``msg["f"]`` at a consumer's top level (outside
+any further ``if``) is *required*; ``msg.get("f")`` or conditional access
+is *optional*.  Producers containing unresolvable ``**splats`` are *open*
+(tag registration only, no field check).
+
+Codes:
+  W501  frame tag produced but never consumed
+  W502  frame tag consumed but never produced
+  W503  consumer requires a field a closed producer never sends
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .core import Finding, SourceFile, frame_consumer_comments, parent_map
+
+__all__ = ["collect", "check", "run", "Producer", "Consumer"]
+
+PASS_ID = "frames"
+
+
+@dataclasses.dataclass
+class Producer:
+    tag: str
+    keys: Set[str]
+    closed: bool
+    rel: str
+    line: int
+    where: str
+
+
+@dataclasses.dataclass
+class Consumer:
+    tag: str
+    required: Set[str]
+    optional: Set[str]
+    rel: str
+    line: int
+    where: str
+
+
+def _dict_info(
+    d: ast.Dict, env: Dict[str, Tuple[Set[str], bool, Optional[str]]]
+) -> Tuple[Set[str], bool, Optional[str]]:
+    keys: Set[str] = set()
+    closed = True
+    tag: Optional[str] = None
+    for k, v in zip(d.keys, d.values):
+        if k is None:  # **splat
+            if isinstance(v, ast.Name) and v.id in env:
+                ks, cl, tg = env[v.id]
+                keys |= ks
+                closed = closed and cl
+                tag = tag or tg
+            else:
+                closed = False
+        elif isinstance(k, ast.Constant) and isinstance(k.value, str):
+            keys.add(k.value)
+            if k.value == "t" and isinstance(v, ast.Constant) and isinstance(
+                v.value, str
+            ):
+                tag = v.value
+        else:
+            closed = False
+    return keys, closed, tag
+
+
+def _functions(tree: ast.Module) -> List[ast.FunctionDef]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.append(node)
+    return out
+
+
+def _collect_producers(src: SourceFile) -> List[Producer]:
+    producers: List[Producer] = []
+    for fn in _functions(src.tree) + [src.tree]:  # type: ignore[list-item]
+        env: Dict[str, Tuple[Set[str], bool, Optional[str]]] = {}
+        body_nodes = []
+        for node in ast.walk(fn):
+            if node is fn:
+                continue
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and not isinstance(
+                fn, ast.Module
+            ):
+                continue
+            body_nodes.append(node)
+        # resolve dict-literal assignments in source order
+        assigns = [
+            n
+            for n in body_nodes
+            if isinstance(n, ast.Assign)
+            and isinstance(n.value, ast.Dict)
+            and len(n.targets) == 1
+            and isinstance(n.targets[0], ast.Name)
+        ]
+        for n in sorted(assigns, key=lambda a: a.lineno):
+            env[n.targets[0].id] = _dict_info(n.value, env)
+        where = getattr(fn, "name", "<module>")
+        for node in body_nodes:
+            if not isinstance(node, ast.Dict):
+                continue
+            keys, closed, tag = _dict_info(node, env)
+            if tag is not None:
+                producers.append(
+                    Producer(tag, keys, closed, src.rel, node.lineno, where)
+                )
+    # module-level scan skipped above for nested fns: dedupe by (line, tag)
+    seen = set()
+    uniq = []
+    for p in producers:
+        k = (p.line, p.tag)
+        if k not in seen:
+            seen.add(k)
+            uniq.append(p)
+    return uniq
+
+
+def _field_accesses(
+    fn: ast.AST, var: str, parents: Dict[ast.AST, ast.AST], root: ast.AST
+) -> Tuple[Set[str], Set[str]]:
+    """(required, optional) fields accessed on ``var`` within ``fn``.
+
+    Required: ``var["f"]`` not nested under any If/IfExp/While below
+    ``root``.  Optional: ``var.get("f")`` or conditionally-reached
+    subscripts.
+    """
+    required: Set[str] = set()
+    optional: Set[str] = set()
+
+    def conditional(node: ast.AST) -> bool:
+        cur = parents.get(node)
+        while cur is not None and cur is not root:
+            if isinstance(cur, (ast.If, ast.IfExp, ast.While)):
+                return True
+            cur = parents.get(cur)
+        return False
+
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == var
+        ):
+            sl = node.slice
+            if isinstance(sl, ast.Constant) and isinstance(sl.value, str):
+                (optional if conditional(node) else required).add(sl.value)
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "get"
+            and isinstance(node.func.value, ast.Name)
+            and node.func.value.id == var
+            and node.args
+            and isinstance(node.args[0], ast.Constant)
+            and isinstance(node.args[0].value, str)
+        ):
+            optional.add(node.args[0].value)
+    required.discard("t")
+    optional.discard("t")
+    return required, optional
+
+
+def _tag_expr_var(test: ast.expr) -> Optional[Tuple[str, str]]:
+    """Match ``k == "tag"`` or ``msg.get("t") == "tag"`` -> (var, tag)."""
+    if not (
+        isinstance(test, ast.Compare)
+        and len(test.ops) == 1
+        and isinstance(test.ops[0], ast.Eq)
+        and len(test.comparators) == 1
+        and isinstance(test.comparators[0], ast.Constant)
+        and isinstance(test.comparators[0].value, str)
+    ):
+        return None
+    tag = test.comparators[0].value
+    left = test.left
+    if isinstance(left, ast.Name):
+        return left.id, tag
+    if (
+        isinstance(left, ast.Call)
+        and isinstance(left.func, ast.Attribute)
+        and left.func.attr == "get"
+        and isinstance(left.func.value, ast.Name)
+        and left.args
+        and isinstance(left.args[0], ast.Constant)
+        and left.args[0].value == "t"
+    ):
+        return f"@{left.func.value.id}", tag  # direct msg.get("t") compare
+    return None
+
+
+def _collect_consumers(src: SourceFile) -> List[Consumer]:
+    consumers: List[Consumer] = []
+    parents = parent_map(src.tree)
+    fns = _functions(src.tree)
+    by_name: Dict[str, ast.FunctionDef] = {f.name: f for f in fns}
+    class_methods: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.ClassDef):
+            for m in node.body:
+                if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    class_methods.setdefault(m.name, m)
+
+    for fn in fns:
+        # tag variables: k = msg.get("t") / k = msg["t"]
+        tagvars: Dict[str, str] = {}
+        for node in ast.walk(fn):
+            if not (
+                isinstance(node, ast.Assign)
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+            ):
+                continue
+            v = node.value
+            msgvar = None
+            if (
+                isinstance(v, ast.Call)
+                and isinstance(v.func, ast.Attribute)
+                and v.func.attr == "get"
+                and isinstance(v.func.value, ast.Name)
+                and v.args
+                and isinstance(v.args[0], ast.Constant)
+                and v.args[0].value == "t"
+            ):
+                msgvar = v.func.value.id
+            elif (
+                isinstance(v, ast.Subscript)
+                and isinstance(v.value, ast.Name)
+                and isinstance(v.slice, ast.Constant)
+                and v.slice.value == "t"
+            ):
+                msgvar = v.value.id
+            if msgvar:
+                tagvars[node.targets[0].id] = msgvar
+
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.If):
+                continue
+            hit = _tag_expr_var(node.test)
+            if hit is None:
+                continue
+            var, tag = hit
+            if var.startswith("@"):
+                msgvar = var[1:]
+            elif var in tagvars:
+                msgvar = tagvars[var]
+            else:
+                continue
+            required: Set[str] = set()
+            optional: Set[str] = set()
+            branch = ast.Module(body=node.body, type_ignores=[])
+            for stmt in node.body:
+                r, o = _field_accesses(stmt, msgvar, parents, node)
+                required |= r
+                optional |= o
+                # follow the message one call level deep
+                for sub in ast.walk(stmt):
+                    if not isinstance(sub, ast.Call):
+                        continue
+                    try:
+                        idx = next(
+                            i
+                            for i, a in enumerate(sub.args)
+                            if isinstance(a, ast.Name) and a.id == msgvar
+                        )
+                    except StopIteration:
+                        continue
+                    target = None
+                    f = sub.func
+                    if isinstance(f, ast.Name):
+                        target = by_name.get(f.id)
+                    elif (
+                        isinstance(f, ast.Attribute)
+                        and isinstance(f.value, ast.Name)
+                        and f.value.id == "self"
+                    ):
+                        target = class_methods.get(f.attr)
+                    if target is None:
+                        continue
+                    params = [a.arg for a in target.args.args]
+                    if params and params[0] == "self":
+                        params = params[1:]
+                    if idx >= len(params):
+                        continue
+                    pname = params[idx]
+                    tparents = parent_map(target)
+                    r2, o2 = _field_accesses(target, pname, tparents, target)
+                    required |= r2
+                    optional |= o2
+            consumers.append(
+                Consumer(tag, required, optional, src.rel, node.lineno, fn.name)
+            )
+
+        # explicit annotations
+        for tags, var in frame_consumer_comments(src, fn):
+            fparents = parent_map(fn)
+            r, o = _field_accesses(fn, var, fparents, fn)
+            if len(tags) > 1:
+                # fields can't be attributed to a single tag: register only
+                o |= r
+                r = set()
+            for tag in tags:
+                consumers.append(
+                    Consumer(tag, set(r), set(o), src.rel, fn.lineno, fn.name)
+                )
+    return consumers
+
+
+def collect(src: SourceFile) -> Tuple[List[Producer], List[Consumer]]:
+    return _collect_producers(src), _collect_consumers(src)
+
+
+def check(
+    producers: Sequence[Producer], consumers: Sequence[Consumer]
+) -> List[Finding]:
+    findings: List[Finding] = []
+    if not producers and not consumers:
+        return findings
+    prod_tags = {p.tag for p in producers}
+    cons_tags = {c.tag for c in consumers}
+    for p in producers:
+        if p.tag not in cons_tags:
+            findings.append(
+                Finding(
+                    PASS_ID,
+                    "W501",
+                    p.rel,
+                    p.line,
+                    f"frame tag {p.tag!r} produced in {p.where}() but no "
+                    f"consumer branch/annotation handles it",
+                    f"unconsumed:{p.tag}",
+                )
+            )
+    for c in consumers:
+        if c.tag not in prod_tags:
+            findings.append(
+                Finding(
+                    PASS_ID,
+                    "W502",
+                    c.rel,
+                    c.line,
+                    f"frame tag {c.tag!r} consumed in {c.where}() but never "
+                    f"produced",
+                    f"unproduced:{c.tag}",
+                )
+            )
+    for c in consumers:
+        for p in producers:
+            if p.tag != c.tag or not p.closed:
+                continue
+            missing = c.required - p.keys
+            if missing:
+                findings.append(
+                    Finding(
+                        PASS_ID,
+                        "W503",
+                        c.rel,
+                        c.line,
+                        f"consumer {c.where}() of frame {c.tag!r} requires "
+                        f"{sorted(missing)} but producer at {p.rel}:{p.line} "
+                        f"({p.where}) sends only {sorted(p.keys)}",
+                        f"missing:{c.tag}:{','.join(sorted(missing))}",
+                    )
+                )
+    return findings
+
+
+def run(sources: Sequence[SourceFile]) -> List[Finding]:
+    producers: List[Producer] = []
+    consumers: List[Consumer] = []
+    for src in sources:
+        p, c = collect(src)
+        producers.extend(p)
+        consumers.extend(c)
+    return check(producers, consumers)

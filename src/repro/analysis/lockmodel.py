@@ -1,0 +1,291 @@
+"""Lock/guard model shared by the lock-discipline, ordering, and blocking
+passes: which attributes are locks, which Condition aliases which Lock,
+which fields are declared guarded, and — per AST node — which locks are
+syntactically held.
+
+Lock identities are strings:
+
+* ``Class.attr``   — an instance lock attribute (Condition aliases resolve
+  to the canonical underlying Lock attribute).
+* ``mod.NAME``     — a module-level lock.
+* ``local.NAME`` / ``obj.x.attr`` — heuristically lock-shaped with-targets
+  (a ``lock`` parameter, a per-handle ``send_lock``); used by the blocking
+  pass only, never for guard checking.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, FrozenSet, Iterator, List, Optional, Set, Tuple
+
+from .core import SourceFile, guard_comment, holds_comment
+
+__all__ = ["ClassModel", "ModuleModel", "collect_module", "HeldWalker"]
+
+_LOCKISH_RE = re.compile(r"(lock|_cond|_mutex)$")
+
+_THREADING_LOCK_CTORS = {"Lock", "RLock"}
+_THREADING_COND_CTORS = {"Condition"}
+
+
+def _ctor_name(call: ast.AST) -> Optional[str]:
+    """'Lock' for threading.Lock() / Lock(); None otherwise."""
+    if not isinstance(call, ast.Call):
+        return None
+    fn = call.func
+    if isinstance(fn, ast.Attribute) and isinstance(fn.value, ast.Name):
+        if fn.value.id in ("threading", "th", "mp", "multiprocessing"):
+            return fn.attr
+        return None
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+@dataclasses.dataclass
+class ClassModel:
+    name: str
+    node: ast.ClassDef
+    # raw lock attr -> canonical lock attr (Condition(self._lock) -> _lock)
+    locks: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # guarded attr -> canonical lock attr
+    guards: Dict[str, str] = dataclasses.field(default_factory=dict)
+    declared: bool = False
+    methods: Dict[str, ast.FunctionDef] = dataclasses.field(default_factory=dict)
+    # attr -> ClassName for ``self.X = ClassName(...)`` (ordering pass)
+    attr_types: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # (lineno, bad_guard_name) for annotations naming unknown locks
+    guard_errors: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
+
+    def lock_id(self, attr: str) -> str:
+        return f"{self.name}.{self.locks.get(attr, attr)}"
+
+    def all_lock_ids(self) -> Set[str]:
+        return {f"{self.name}.{c}" for c in set(self.locks.values())}
+
+
+@dataclasses.dataclass
+class ModuleModel:
+    src: SourceFile
+    classes: Dict[str, ClassModel] = dataclasses.field(default_factory=dict)
+    functions: Dict[str, ast.FunctionDef] = dataclasses.field(default_factory=dict)
+    # module-level lock name -> canonical name
+    locks: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # module-level guarded name -> canonical lock name
+    guards: Dict[str, str] = dataclasses.field(default_factory=dict)
+    guard_errors: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
+
+
+def _iter_methods(cls: ast.ClassDef) -> Iterator[ast.FunctionDef]:
+    for stmt in cls.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield stmt  # type: ignore[misc]
+
+
+def _self_attr_targets(stmt: ast.stmt) -> List[str]:
+    targets: List[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, ast.AnnAssign):
+        targets = [stmt.target]
+    out = []
+    for t in targets:
+        if (
+            isinstance(t, ast.Attribute)
+            and isinstance(t.value, ast.Name)
+            and t.value.id == "self"
+        ):
+            out.append(t.attr)
+    return out
+
+
+def collect_module(src: SourceFile) -> ModuleModel:
+    mod = ModuleModel(src=src)
+    tree = src.tree
+
+    # module-level locks + guards + functions
+    for stmt in tree.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            mod.functions[stmt.name] = stmt  # type: ignore[assignment]
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+            targets = (
+                stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+            )
+            names = [t.id for t in targets if isinstance(t, ast.Name)]
+            value = stmt.value
+            ctor = _ctor_name(value) if value is not None else None
+            if names and ctor in _THREADING_LOCK_CTORS | _THREADING_COND_CTORS:
+                for n in names:
+                    mod.locks[n] = n
+            else:
+                g = guard_comment(src, stmt.lineno)
+                if g and names:
+                    for n in names:
+                        mod.guards[n] = g
+    for name, lock in list(mod.guards.items()):
+        if lock not in mod.locks:
+            mod.guard_errors.append((1, lock))
+            del mod.guards[name]
+
+    for stmt in tree.body:
+        if not isinstance(stmt, ast.ClassDef):
+            continue
+        cm = ClassModel(name=stmt.name, node=stmt)
+        raw_conds: Dict[str, Optional[str]] = {}
+        for meth in _iter_methods(stmt):
+            cm.methods[meth.name] = meth
+            for node in ast.walk(meth):
+                if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+                    continue
+                attrs = _self_attr_targets(node)
+                if not attrs:
+                    continue
+                value = node.value
+                ctor = _ctor_name(value) if value is not None else None
+                if ctor in _THREADING_LOCK_CTORS:
+                    for a in attrs:
+                        cm.locks[a] = a
+                elif ctor in _THREADING_COND_CTORS:
+                    arg = value.args[0] if getattr(value, "args", None) else None
+                    alias = (
+                        arg.attr
+                        if isinstance(arg, ast.Attribute)
+                        and isinstance(arg.value, ast.Name)
+                        and arg.value.id == "self"
+                        else None
+                    )
+                    for a in attrs:
+                        raw_conds[a] = alias
+                elif ctor and ctor[0].isupper():
+                    for a in attrs:
+                        cm.attr_types[a] = ctor
+                # guard annotation may sit on any line of the statement
+                g = None
+                for ln in range(node.lineno, getattr(node, "end_lineno", node.lineno) + 1):
+                    g = guard_comment(src, ln)
+                    if g:
+                        break
+                if g:
+                    for a in attrs:
+                        cm.guards[a] = g
+        for a, alias in raw_conds.items():
+            cm.locks[a] = alias if (alias and alias in cm.locks) else a
+        # canonicalise guards; drop ones naming unknown locks (reported)
+        for a, g in list(cm.guards.items()):
+            if g in cm.locks:
+                cm.guards[a] = cm.locks[g]
+            else:
+                cm.guard_errors.append((stmt.lineno, g))
+                del cm.guards[a]
+        cm.declared = bool(cm.guards)
+        mod.classes[stmt.name] = cm
+    return mod
+
+
+class HeldWalker:
+    """Yield ``(node, held)`` for every node in a function body, where
+    ``held`` is the frozenset of lock ids syntactically held at that node.
+
+    Conventions honoured:
+
+    * ``with self._lock:`` / ``with self._cond:``  — acquires the canonical
+      class lock (Condition aliases resolve).
+    * methods named ``*_locked``                   — hold every class lock
+      on entry (the repo-wide caller-holds convention).
+    * ``# holds: _lock`` on the ``def`` line       — holds that lock.
+    * nested ``def``/``lambda`` bodies reset ``held`` to the function's
+      entry set minus with-acquired locks (a closure does not inherit the
+      lexical lock region it was created in).
+
+    ``acquisitions`` records ``(held_before, lock_id, node)`` for every
+    with-acquisition — the ordering pass's edge source.
+    """
+
+    def __init__(
+        self,
+        mod: ModuleModel,
+        cls: Optional[ClassModel],
+        fn: ast.FunctionDef,
+    ) -> None:
+        self.mod = mod
+        self.cls = cls
+        self.fn = fn
+        self.acquisitions: List[Tuple[FrozenSet[str], str, ast.AST]] = []
+        self.exempt = fn.name == "__init__"
+
+    def lock_id_for_expr(self, expr: ast.expr) -> Optional[str]:
+        if isinstance(expr, ast.Attribute) and isinstance(expr.value, ast.Name):
+            base, attr = expr.value.id, expr.attr
+            if base == "self" and self.cls is not None:
+                if attr in self.cls.locks:
+                    return self.cls.lock_id(attr)
+                if _LOCKISH_RE.search(attr):
+                    return f"{self.cls.name}.{attr}"
+                return None
+            if _LOCKISH_RE.search(attr):
+                return f"obj.{base}.{attr}"
+            return None
+        if isinstance(expr, ast.Name):
+            if expr.id in self.mod.locks:
+                return f"mod.{self.mod.locks[expr.id]}"
+            if _LOCKISH_RE.search(expr.id):
+                return f"local.{expr.id}"
+        return None
+
+    def initial_held(self) -> FrozenSet[str]:
+        held: Set[str] = set()
+        if self.cls is not None and self.fn.name.endswith("_locked"):
+            held |= self.cls.all_lock_ids()
+        h = holds_comment(self.mod.src, self.fn.lineno)
+        if h is None and self.fn.lineno > 1:
+            h = holds_comment(self.mod.src, self.fn.lineno - 1)
+        if h:
+            if self.cls is not None and h in self.cls.locks:
+                held.add(self.cls.lock_id(h))
+            elif h in self.mod.locks:
+                held.add(f"mod.{self.mod.locks[h]}")
+            else:
+                held.add(f"local.{h}")
+        return frozenset(held)
+
+    def walk(self) -> Iterator[Tuple[ast.AST, FrozenSet[str]]]:
+        entry = self.initial_held()
+        yield from self._visit_body(self.fn.body, entry)
+
+    def _visit_body(
+        self, body: List[ast.stmt], held: FrozenSet[str]
+    ) -> Iterator[Tuple[ast.AST, FrozenSet[str]]]:
+        for stmt in body:
+            yield from self._visit(stmt, held)
+
+    def _visit(
+        self, node: ast.AST, held: FrozenSet[str]
+    ) -> Iterator[Tuple[ast.AST, FrozenSet[str]]]:
+        yield node, held
+        if isinstance(node, ast.With):
+            acquired: Set[str] = set()
+            for item in node.items:
+                yield from self._walk_expr(item.context_expr, held)
+                lid = self.lock_id_for_expr(item.context_expr)
+                if lid is not None and lid not in held:
+                    self.acquisitions.append((held, lid, node))
+                    acquired.add(lid)
+            inner = held | acquired
+            yield from self._visit_body(node.body, frozenset(inner))
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # a nested def is a closure that may run later, without the
+            # lexical lock; lambdas (sort keys etc.) are treated as inline
+            for stmt in node.body:
+                yield from self._visit(stmt, frozenset())
+            return
+        for child in ast.iter_child_nodes(node):
+            yield from self._visit(child, held)
+
+    def _walk_expr(
+        self, expr: ast.expr, held: FrozenSet[str]
+    ) -> Iterator[Tuple[ast.AST, FrozenSet[str]]]:
+        for sub in ast.walk(expr):
+            yield sub, held

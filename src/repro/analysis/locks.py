@@ -1,0 +1,213 @@
+"""Pass 1a — lock discipline.
+
+For every class, determine which attributes are guarded by which lock —
+either *declared* via the ``# guard: _lock`` annotation convention (any
+declaration switches the class to declared mode, inference off) or
+*inferred* from dominant ``with self._lock:`` usage — then flag every
+unguarded read/write of a guarded field.
+
+Codes:
+  L101  guard annotation names an unknown lock
+  L201  write to a guarded field outside its lock
+  L202  read of a guarded field outside its lock
+  L211  write outside the lock that guards this field (inferred)
+  L212  read outside the lock that guards this field (inferred)
+"""
+
+from __future__ import annotations
+
+import ast
+import collections
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+from .core import Finding, SourceFile
+from .lockmodel import ClassModel, HeldWalker, ModuleModel, collect_module
+
+__all__ = ["run"]
+
+PASS_ID = "locks"
+
+# inference: an attribute with >= MIN_SITES accesses, >= RATIO of them under
+# one dominant lock (and at least one held write), is treated as guarded
+_MIN_SITES = 4
+_RATIO = 0.75
+
+# a call to one of these on a guarded container IS a write, even though the
+# attribute itself is only loaded (``self._queue.pop()``): the historical
+# dequeue/lease race was exactly this shape
+_MUTATOR_ATTRS = {
+    "append", "extend", "insert", "pop", "popitem", "remove", "clear",
+    "add", "discard", "update", "setdefault", "appendleft", "popleft",
+    "move_to_end", "sort",
+}
+
+
+def _fn_qual(cls: Optional[ClassModel], fn: ast.FunctionDef) -> str:
+    return f"{cls.name}.{fn.name}" if cls else fn.name
+
+
+def _self_accesses(
+    mod: ModuleModel, cls: ClassModel, fn: ast.FunctionDef
+) -> List[Tuple[str, bool, FrozenSet[str], int]]:
+    """(attr, is_write, held, lineno) for every ``self.X`` access."""
+    out = []
+    w = HeldWalker(mod, cls, fn)
+    mutated_loads = set()
+    for node, _held in w.walk():
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in _MUTATOR_ATTRS
+        ):
+            target = node.func.value
+            if (
+                isinstance(target, ast.Attribute)
+                and isinstance(target.value, ast.Name)
+                and target.value.id == "self"
+            ):
+                mutated_loads.add(id(target))
+    w = HeldWalker(mod, cls, fn)
+    for node, held in w.walk():
+        if (
+            isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"
+        ):
+            is_write = (
+                isinstance(node.ctx, (ast.Store, ast.Del))
+                or id(node) in mutated_loads
+            )
+            out.append((node.attr, is_write, held, node.lineno))
+    return out
+
+
+def _check_class(mod: ModuleModel, cls: ClassModel, findings: List[Finding]) -> None:
+    src = mod.src
+    for lineno, bad in cls.guard_errors:
+        findings.append(
+            Finding(
+                PASS_ID,
+                "L101",
+                src.rel,
+                lineno,
+                f"{cls.name}: '# guard: {bad}' names no known lock attribute "
+                f"(locks: {sorted(set(cls.locks)) or 'none'})",
+                f"{cls.name}:badguard:{bad}",
+            )
+        )
+
+    if cls.declared:
+        guards = dict(cls.guards)
+        codes = ("L201", "L202")
+    else:
+        guards = _infer_guards(mod, cls)
+        codes = ("L211", "L212")
+    if not guards:
+        return
+
+    for name, fn in cls.methods.items():
+        if name == "__init__":
+            continue
+        for attr, is_write, held, lineno in _self_accesses(mod, cls, fn):
+            lock = guards.get(attr)
+            if lock is None:
+                continue
+            lock_id = f"{cls.name}.{lock}"
+            if lock_id in held:
+                continue
+            kind = "write to" if is_write else "read of"
+            code = codes[0] if is_write else codes[1]
+            how = "declared" if cls.declared else "inferred"
+            findings.append(
+                Finding(
+                    PASS_ID,
+                    code,
+                    src.rel,
+                    lineno,
+                    f"{kind} {cls.name}.{attr} outside {cls.name}.{lock} "
+                    f"({how} guard) in {_fn_qual(cls, fn)}()",
+                    f"{cls.name}.{attr}:{fn.name}:{'w' if is_write else 'r'}",
+                )
+            )
+
+
+def _infer_guards(mod: ModuleModel, cls: ClassModel) -> Dict[str, str]:
+    if not cls.locks:
+        return {}
+    stats: Dict[str, collections.Counter] = collections.defaultdict(
+        collections.Counter
+    )
+    total: collections.Counter = collections.Counter()
+    held_write: collections.Counter = collections.Counter()
+    for name, fn in cls.methods.items():
+        if name == "__init__":
+            continue
+        for attr, is_write, held, _ in _self_accesses(mod, cls, fn):
+            if attr in cls.locks:
+                continue
+            total[attr] += 1
+            for lid in held:
+                if lid.startswith(f"{cls.name}."):
+                    stats[attr][lid.split(".", 1)[1]] += 1
+                    if is_write:
+                        held_write[attr] += 1
+    guards: Dict[str, str] = {}
+    for attr, n in total.items():
+        if n < _MIN_SITES or not stats[attr]:
+            continue
+        lock, held_n = stats[attr].most_common(1)[0]
+        if held_n / n >= _RATIO and held_write[attr] > 0:
+            guards[attr] = lock
+    return guards
+
+
+def _check_module_guards(mod: ModuleModel, findings: List[Finding]) -> None:
+    src = mod.src
+    for lineno, bad in mod.guard_errors:
+        findings.append(
+            Finding(
+                PASS_ID,
+                "L101",
+                src.rel,
+                lineno,
+                f"module-level '# guard: {bad}' names no module-level lock",
+                f"module:badguard:{bad}",
+            )
+        )
+    if not mod.guards:
+        return
+    fns: List[Tuple[Optional[ClassModel], ast.FunctionDef]] = [
+        (None, fn) for fn in mod.functions.values()
+    ]
+    for cls in mod.classes.values():
+        fns.extend((cls, m) for m in cls.methods.values())
+    for cls, fn in fns:
+        w = HeldWalker(mod, cls, fn)
+        for node, held in w.walk():
+            if not (isinstance(node, ast.Name) and node.id in mod.guards):
+                continue
+            lock = mod.guards[node.id]
+            if f"mod.{lock}" in held:
+                continue
+            is_write = isinstance(node.ctx, (ast.Store, ast.Del))
+            findings.append(
+                Finding(
+                    PASS_ID,
+                    "L201" if is_write else "L202",
+                    src.rel,
+                    node.lineno,
+                    f"{'write to' if is_write else 'read of'} module-level "
+                    f"{node.id} outside {lock} in {_fn_qual(cls, fn)}()",
+                    f"module.{node.id}:{_fn_qual(cls, fn)}:"
+                    f"{'w' if is_write else 'r'}",
+                )
+            )
+
+
+def run(src: SourceFile, mod: Optional[ModuleModel] = None) -> List[Finding]:
+    mod = mod or collect_module(src)
+    findings: List[Finding] = []
+    for cls in mod.classes.values():
+        _check_class(mod, cls, findings)
+    _check_module_guards(mod, findings)
+    return findings

@@ -1,0 +1,121 @@
+"""Driver for the static-analysis suite: load sources, run the four passes,
+apply inline suppressions and the findings baseline, report.
+
+Programmatic entry point (used by ``__main__``, the self-tests, and
+``benchmarks/analysis.py``)::
+
+    report = run_paths([pathlib.Path("src/repro")])
+    assert report.ok, report.render()
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import blocking, frames, locks, ordering, spawn
+from .core import (
+    Baseline,
+    Finding,
+    SourceFile,
+    dedupe,
+    is_suppressed,
+    iter_py_files,
+    load_source,
+)
+from .lockmodel import collect_module
+
+__all__ = ["Report", "run_paths", "run_sources", "default_root", "default_baseline_path"]
+
+
+def default_root() -> pathlib.Path:
+    """The ``src`` directory this package is installed under."""
+    return pathlib.Path(__file__).resolve().parents[2]
+
+
+def default_target() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parents[1]  # src/repro
+
+
+def default_baseline_path() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parent / "baseline.json"
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]  # unsuppressed, non-baselined
+    suppressed: int  # waived by inline ``# analysis: ok[...]``
+    baselined: List[Finding]
+    stale: List[str]  # baseline fingerprints that no longer fire
+    files: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    @property
+    def strict_ok(self) -> bool:
+        return not self.findings and not self.stale
+
+    def render(self) -> str:
+        lines = []
+        for f in self.findings:
+            lines.append(f.render())
+        for fp in self.stale:
+            lines.append(f"stale baseline entry (no longer fires): {fp}")
+        lines.append(
+            f"analysis: {self.files} files, {len(self.findings)} findings, "
+            f"{self.suppressed} suppressed inline, "
+            f"{len(self.baselined)} baselined, {len(self.stale)} stale"
+        )
+        return "\n".join(lines)
+
+
+def run_sources(
+    sources: Sequence[SourceFile],
+    baseline: Optional[Baseline] = None,
+) -> Report:
+    baseline = baseline or Baseline()
+    mods = []
+    raw: List[Finding] = []
+    by_rel: Dict[str, SourceFile] = {}
+    for src in sources:
+        by_rel[src.rel] = src
+        mod = collect_module(src)
+        mods.append(mod)
+        raw.extend(locks.run(src, mod))
+        raw.extend(blocking.run(src, mod))
+        raw.extend(spawn.run(src))
+    raw.extend(ordering.run_project(mods))
+    raw.extend(frames.run(sources))
+    raw = dedupe(raw)
+
+    kept: List[Finding] = []
+    suppressed = 0
+    for f in raw:
+        src = by_rel.get(f.path)
+        if src is not None and is_suppressed(src, f):
+            suppressed += 1
+        else:
+            kept.append(f)
+    fresh, known, stale = baseline.split(kept)
+    return Report(
+        findings=fresh,
+        suppressed=suppressed,
+        baselined=known,
+        stale=stale,
+        files=len(sources),
+    )
+
+
+def run_paths(
+    paths: Optional[Sequence[pathlib.Path]] = None,
+    baseline_path: Optional[pathlib.Path] = None,
+    root: Optional[pathlib.Path] = None,
+) -> Report:
+    paths = list(paths) if paths else [default_target()]
+    root = root or default_root().parent
+    baseline = Baseline.load(baseline_path or default_baseline_path())
+    sources = [load_source(p, root) for p in iter_py_files(paths)]
+    return run_sources(sources, baseline)

@@ -1,0 +1,267 @@
+"""Pass 4 — spawn picklability & determinism.
+
+Spawn side: lambdas and closure-local functions flowing into spawn-boundary
+call sites (``build=`` / ``initializer=`` keywords anywhere, ``target=`` /
+``args=`` / ``initargs=`` on ``Process``/``Pool``-like constructors) cross
+a pickle boundary and fail at runtime on spawn start — flag them at the
+call site.  Lambda default values on ``build``/``initializer`` parameters
+are the same bug one step removed.
+
+Determinism side: result keys and recipe keys must be stable across
+processes and runs — inside derivation functions (name matches
+``key``/``keys``/``recipe``), flag wall-clock reads, ``random``/``uuid``,
+salted ``hash()``/``id()``, ``os.getpid``/``urandom``, unsorted dict
+iteration, and ``json.dumps`` without ``sort_keys=True``.
+
+Codes:
+  S601  lambda at a spawn boundary
+  S602  closure-local function at a spawn boundary
+  S603  lambda default on a spawn-boundary parameter
+  S611  nondeterministic call in a key/recipe derivation function
+  S612  unsorted dict iteration in a key/recipe derivation function
+  S613  json.dumps without sort_keys=True in a derivation function
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set
+
+from .core import Finding, SourceFile, parent_map
+
+__all__ = ["run"]
+
+PASS_ID = "spawn"
+
+_SPAWN_KW_ANY = {"build", "initializer"}
+_SPAWN_KW_PROC = {"target", "args", "initargs"}
+_PROC_CTOR_RE = re.compile(r"(Process|Pool|Executor)")
+_KEY_FN_RE = re.compile(r"(^|_)(key|keys|recipe)(_|$)")
+_ORDER_SAFE_WRAPPERS = {"sorted", "set", "frozenset", "min", "max", "sum", "len"}
+
+_TIME_ATTRS = {"time", "time_ns", "monotonic", "monotonic_ns", "perf_counter"}
+
+
+def _fn_name_of_call(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _closure_fn_names(
+    node: ast.AST, parents: Dict[ast.AST, ast.AST]
+) -> Set[str]:
+    """Names of functions defined inside any enclosing function of ``node``."""
+    names: Set[str] = set()
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for sub in ast.walk(cur):
+                if (
+                    isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and sub is not cur
+                ):
+                    names.add(sub.name)
+        cur = parents.get(cur)
+    return names
+
+
+def _flag_value(
+    value: ast.expr,
+    closure_names: Set[str],
+    src: SourceFile,
+    where: str,
+    kw: str,
+    findings: List[Finding],
+) -> None:
+    for sub in ast.walk(value):
+        if isinstance(sub, ast.Lambda):
+            findings.append(
+                Finding(
+                    PASS_ID,
+                    "S601",
+                    src.rel,
+                    sub.lineno,
+                    f"lambda passed to spawn-boundary {kw}= in {where} — "
+                    f"not picklable under the spawn start method",
+                    f"{where}:{kw}:lambda",
+                )
+            )
+        elif isinstance(sub, ast.Name) and sub.id in closure_names:
+            findings.append(
+                Finding(
+                    PASS_ID,
+                    "S602",
+                    src.rel,
+                    sub.lineno,
+                    f"closure-local function {sub.id!r} passed to "
+                    f"spawn-boundary {kw}= in {where} — not picklable",
+                    f"{where}:{kw}:{sub.id}",
+                )
+            )
+
+
+def _enclosing_fn(node: ast.AST, parents: Dict[ast.AST, ast.AST]) -> str:
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur.name
+        cur = parents.get(cur)
+    return "<module>"
+
+
+def _check_spawn(src: SourceFile, parents: Dict[ast.AST, ast.AST]) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Call):
+            ctor = _fn_name_of_call(node)
+            is_proc = bool(_PROC_CTOR_RE.search(ctor))
+            closure_names = _closure_fn_names(node, parents)
+            where = _enclosing_fn(node, parents)
+            for kw in node.keywords:
+                if kw.arg in _SPAWN_KW_ANY or (
+                    is_proc and kw.arg in _SPAWN_KW_PROC
+                ):
+                    _flag_value(
+                        kw.value, closure_names, src, where, kw.arg, findings
+                    )
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = node.args
+            named = args.posonlyargs + args.args + args.kwonlyargs
+            defaults = (
+                [None] * (len(args.posonlyargs) + len(args.args) - len(args.defaults))
+                + list(args.defaults)
+                + list(args.kw_defaults)
+            )
+            for a, d in zip(named, defaults):
+                if (
+                    d is not None
+                    and isinstance(d, ast.Lambda)
+                    and a.arg in _SPAWN_KW_ANY
+                ):
+                    findings.append(
+                        Finding(
+                            PASS_ID,
+                            "S603",
+                            src.rel,
+                            d.lineno,
+                            f"lambda default for spawn-boundary parameter "
+                            f"{a.arg!r} of {node.name}() — not picklable",
+                            f"{node.name}:{a.arg}:lambda-default",
+                        )
+                    )
+    return findings
+
+
+def _order_safe(node: ast.AST, parents: Dict[ast.AST, ast.AST]) -> bool:
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, ast.Call):
+            f = cur.func
+            if isinstance(f, ast.Name) and f.id in _ORDER_SAFE_WRAPPERS:
+                return True
+        if isinstance(cur, (ast.stmt, ast.FunctionDef)):
+            break
+        cur = parents.get(cur)
+    return False
+
+
+def _nondet_desc(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if isinstance(f, ast.Name):
+        if f.id in ("hash", "id"):
+            return f"{f.id}() (process-salted / address-based)"
+        return None
+    if not isinstance(f, ast.Attribute):
+        return None
+    base = f.value.id if isinstance(f.value, ast.Name) else None
+    if base == "time" and f.attr in _TIME_ATTRS:
+        return f"time.{f.attr}()"
+    if base == "random":
+        return f"random.{f.attr}()"
+    if base == "uuid":
+        return f"uuid.{f.attr}()"
+    if base == "os" and f.attr in ("urandom", "getpid"):
+        return f"os.{f.attr}()"
+    return None
+
+
+def _check_determinism(
+    src: SourceFile, parents: Dict[ast.AST, ast.AST]
+) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn in ast.walk(src.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not _KEY_FN_RE.search(fn.name):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            desc = _nondet_desc(node)
+            if desc:
+                findings.append(
+                    Finding(
+                        PASS_ID,
+                        "S611",
+                        src.rel,
+                        node.lineno,
+                        f"nondeterministic {desc} inside key/recipe "
+                        f"derivation {fn.name}()",
+                        f"{fn.name}:{desc}",
+                    )
+                )
+                continue
+            f = node.func
+            if (
+                isinstance(f, ast.Attribute)
+                and f.attr in ("items", "keys", "values")
+                and not node.args
+                and not _order_safe(node, parents)
+            ):
+                findings.append(
+                    Finding(
+                        PASS_ID,
+                        "S612",
+                        src.rel,
+                        node.lineno,
+                        f"unsorted .{f.attr}() iteration inside key/recipe "
+                        f"derivation {fn.name}() — dict order is "
+                        f"insertion-dependent",
+                        f"{fn.name}:{f.attr}",
+                    )
+                )
+            if (
+                isinstance(f, ast.Attribute)
+                and f.attr == "dumps"
+                and isinstance(f.value, ast.Name)
+                and f.value.id == "json"
+            ):
+                has_sort = any(
+                    kw.arg == "sort_keys"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True
+                    for kw in node.keywords
+                )
+                if not has_sort:
+                    findings.append(
+                        Finding(
+                            PASS_ID,
+                            "S613",
+                            src.rel,
+                            node.lineno,
+                            f"json.dumps without sort_keys=True inside "
+                            f"key/recipe derivation {fn.name}()",
+                            f"{fn.name}:json.dumps",
+                        )
+                    )
+    return findings
+
+
+def run(src: SourceFile) -> List[Finding]:
+    parents = parent_map(src.tree)
+    return _check_spawn(src, parents) + _check_determinism(src, parents)

@@ -62,13 +62,13 @@ class ResultCache:
         self.spill_store = spill_store
         self._entries: "collections.OrderedDict[Tuple, Tuple[Any, int]]" = (
             collections.OrderedDict()
-        )
-        self._bytes = 0
+        )  # guard: _lock
+        self._bytes = 0  # guard: _lock
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-        self.spills = 0
-        self.rehydrations = 0
+        self.hits = 0  # guard: _lock
+        self.misses = 0  # guard: _lock
+        self.spills = 0  # guard: _lock
+        self.rehydrations = 0  # guard: _lock
 
     @staticmethod
     def _store_key(key: Tuple) -> str:

@@ -46,7 +46,7 @@ __all__ = ["execute_study"]
 # Unique plan ids for spec-capable backends: an external Manager session
 # may execute many plans (adaptive rounds), and worker processes cache the
 # rebuilt plans by this id.
-_PLAN_IDS = itertools.count()
+_PLAN_IDS = itertools.count()  # guard: _PLAN_IDS_LOCK
 _PLAN_IDS_LOCK = threading.Lock()
 
 

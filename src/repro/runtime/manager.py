@@ -167,62 +167,62 @@ class Manager:
         self._hier: HierarchySpec = self.hierarchy  # resolved at start()
         self._subs: List[_SubPump] = []
         self._sub_stop = threading.Event()
-        self._sub_error: Optional[BaseException] = None
+        self._sub_error: Optional[BaseException] = None  # guard: _lock
         # Block-delegation cursor: the sub currently receiving the leader's
         # contiguous block, and how many items remain in that block.
-        self._block_sub: Optional[_SubPump] = None
-        self._block_left = 0
+        self._block_sub: Optional[_SubPump] = None  # guard: _lock
+        self._block_left = 0  # guard: _lock
         # worker_id -> reuse-tree path of its last successful completion:
         # the affinity map behind locality-aware dispatch.
-        self._affinity: Dict[int, tuple] = {}
+        self._affinity: Dict[int, tuple] = {}  # guard: _lock
         # worker_id -> attempt-seconds it has executed (all attempts, both
         # outcomes) — the per-worker occupancy the benchmark reports.
-        self._worker_busy: Dict[int, float] = {}
-        self._n_workers = 0
-        self._pump_busy = 0.0  # leader-pump seconds spent doing work
-        self._session_t0: Optional[float] = None
-        self._session_t1: Optional[float] = None
-        self.steals = 0
-        self.steal_items = 0
-        self.locality_hits = 0
-        self.locality_misses = 0
-        self._queue: "collections.deque[WorkItem]" = collections.deque()
-        self._results: Dict[str, Any] = {}
-        self._running: Dict[str, WorkItem] = {}
-        self._attempt_seq: Dict[str, int] = {}  # highest attempt # issued per key
-        self._callbacks: Dict[str, Callable[[str, Any], None]] = {}
-        self._pending: set = set()  # keys submitted, no result yet
+        self._worker_busy: Dict[int, float] = {}  # guard: _lock
+        self._n_workers = 0  # guard: _lock
+        self._pump_busy = 0.0  # guard: _lock — leader-pump seconds spent doing work
+        self._session_t0: Optional[float] = None  # guard: _lock
+        self._session_t1: Optional[float] = None  # guard: _lock
+        self.steals = 0  # guard: _lock
+        self.steal_items = 0  # guard: _lock
+        self.locality_hits = 0  # guard: _lock
+        self.locality_misses = 0  # guard: _lock
+        self._queue: "collections.deque[WorkItem]" = collections.deque()  # guard: _lock
+        self._results: Dict[str, Any] = {}  # guard: _lock
+        self._running: Dict[str, WorkItem] = {}  # guard: _lock
+        self._attempt_seq: Dict[str, int] = {}  # guard: _lock — highest attempt # issued per key
+        self._callbacks: Dict[str, Callable[[str, Any], None]] = {}  # guard: _lock
+        self._pending: set = set()  # guard: _lock — keys submitted, no result yet
         # Keys forgotten while still holding a lease: their bookkeeping is
         # kept for first-completion-wins dedup and released when the last
         # lease settles (drained in _settle), so a long-lived fleet session
         # stays bounded even when forget() races in-flight attempts.
-        self._deferred_forget: set = set()
+        self._deferred_forget: set = set()  # guard: _lock
         # Lease ids stranded by a key's resubmission (a new lifecycle began
         # while the old lifecycle's attempt still ran): their completions
         # must not settle the new lifecycle, so they are dropped on arrival.
-        self._orphaned: set = set()
+        self._orphaned: set = set()  # guard: _lock
         # Recent-window of winning-attempt durations for the straggler /
         # heartbeat heuristics: bounded so a session spanning thousands of
         # inputs never grows the median computation, with the sorted median
         # cached between appends (the pump polls it every tick).
-        self._durations: "collections.deque[float]" = collections.deque(maxlen=512)
-        self._median_cache: Optional[float] = None
-        self._busy_total = 0.0  # lifetime sum (the efficiency numerator)
+        self._durations: "collections.deque[float]" = collections.deque(maxlen=512)  # guard: _lock
+        self._median_cache: Optional[float] = None  # guard: _lock
+        self._busy_total = 0.0  # guard: _lock — lifetime sum (the efficiency numerator)
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._pump_thread: Optional[threading.Thread] = None
-        self._state = _NEW
+        self._state = _NEW  # guard: _lock
         self.max_attempts = max_attempts
         self.heartbeat_timeout = heartbeat_timeout
         self.straggler_factor = straggler_factor
         self.enable_backup_tasks = enable_backup_tasks
-        self.retries = 0
-        self.backups_launched = 0
-        self.heartbeat_expiries = 0
+        self.retries = 0  # guard: _lock
+        self.backups_launched = 0  # guard: _lock
+        self.heartbeat_expiries = 0  # guard: _lock
         # Leases handed to each backend (keyed by backend name) over this
         # Manager's lifetime — the per-backend dispatch accounting surfaced
         # by study summaries.
-        self.dispatch_counts: Dict[str, int] = {}
+        self.dispatch_counts: Dict[str, int] = {}  # guard: _lock
 
     @property
     def backend(self):
@@ -237,6 +237,8 @@ class Manager:
     def is_running(self) -> bool:
         """True between ``start`` and the completion of ``close`` — i.e.
         the session can still execute work."""
+        # analysis: ok[locks] deliberately lock-free status probe; _state is
+        # a small int and a stale answer is as good as one a tick later
         return self._state in (_RUNNING, _CLOSING)
 
     @property
@@ -1131,9 +1133,11 @@ class Manager:
                             spec=item.spec,
                         )
                         if backend.offer(lease):
-                            self.dispatch_counts[self.backend_name] = (
-                                self.dispatch_counts.get(self.backend_name, 0) + 1
-                            )
+                            with self._cond:
+                                self.dispatch_counts[self.backend_name] = (
+                                    self.dispatch_counts.get(self.backend_name, 0)
+                                    + 1
+                                )
                             free -= 1
                         else:  # slot vanished since snapshot (worker death)
                             with self._cond:
@@ -1174,9 +1178,10 @@ class Manager:
             rejected = {lease.lease_id for lease in offer_batch(leases)}
             accepted = len(batch) - len(rejected)
             if accepted:
-                self.dispatch_counts[self.backend_name] = (
-                    self.dispatch_counts.get(self.backend_name, 0) + accepted
-                )
+                with self._cond:
+                    self.dispatch_counts[self.backend_name] = (
+                        self.dispatch_counts.get(self.backend_name, 0) + accepted
+                    )
             if rejected:
                 with self._cond:
                     for it in reversed(batch):
@@ -1197,6 +1202,7 @@ class Manager:
                     self._cond.wait(_IDLE_TICK)
         finally:
             self.close()
+        # analysis: ok[locks] close() joined the pump: no writer is left
         return dict(self._results)
 
 

@@ -258,6 +258,7 @@ def run_worker(
     """
     from repro.engine.types import DEFAULT_CACHE_BYTES
 
+    # frame-consumer: welcome,reject via reply
     host, port = parse_address(address)
     wid = worker_id
     ctx: Optional[_RpcWorker] = None
@@ -457,21 +458,24 @@ class SocketBackend:
         self.address: Optional[str] = None  # bound host:port after start()
         self._listener: Optional[socket.socket] = None
         self._accept_thread: Optional[threading.Thread] = None
-        self._handles: Dict[int, _SocketHandle] = {}
-        self._tombstones: "Dict[int, Tuple[float, Tuple[str, ...]]]" = {}
-        self._next_wid = 0
-        self._next_tomb = -1
-        self._studies: List[Dict[str, Any]] = []
+        # _handles/_tombstones and every per-handle inflight map are guarded
+        # by _lock: reader threads (handshake, death/tombstoning) and the
+        # pump (offers, hydration) race over them.
+        self._handles: Dict[int, _SocketHandle] = {}  # guard: _lock
+        self._tombstones: "Dict[int, Tuple[float, Tuple[str, ...]]]" = {}  # guard: _lock
+        self._next_wid = 0  # guard: _lock
+        self._next_tomb = -1  # guard: _lock
+        self._studies: List[Dict[str, Any]] = []  # guard: _lock
         self._store = None
         self._flusher = None
         self._rx: "queue.Queue[Tuple[_SocketHandle, Dict[str, Any]]]" = queue.Queue()
         self._lock = threading.Lock()
         self._registered = threading.Condition(self._lock)
-        self._closing = False
+        self._closing = False  # guard: _lock
         self._session = ""
         self._procs: List[Any] = []
-        self._worker_stats: Dict[int, Dict[str, Any]] = {}
-        self._counters: Dict[str, int] = {
+        self._worker_stats: Dict[int, Dict[str, Any]] = {}  # guard: _lock
+        self._counters: Dict[str, int] = {  # guard: _lock
             "lease_frames": 0,
             "lease_batches": 0,
             "comp_batches": 0,
@@ -519,11 +523,13 @@ class SocketBackend:
 
         n = max(1, n_workers)
         self._session = uuid.uuid4().hex[:12]
-        self._closing = False
-        self._worker_stats = {}
-        self._handles = {}
-        self._tombstones = {}
-        self._next_wid = 0
+        # init-phase reset: the accept thread (and so every reader) starts
+        # a few lines below; no concurrent access is possible yet
+        self._closing = False  # analysis: ok[locks] init phase
+        self._worker_stats = {}  # analysis: ok[locks] init phase
+        self._handles = {}  # analysis: ok[locks] init phase
+        self._tombstones = {}  # analysis: ok[locks] init phase
+        self._next_wid = 0  # analysis: ok[locks] init phase
         self._rx = queue.Queue()
         if self.async_commit:
             from repro.runtime.storage import AsyncCommitQueue
@@ -578,6 +584,9 @@ class SocketBackend:
 
     # -- accept / handshake ----------------------------------------------
     def _accept_loop(self) -> None:
+        # analysis: ok[locks] lock-free poll of the shutdown flag: a stale
+        # read costs one extra accept() round, and closing the listener
+        # unblocks accept() with OSError anyway
         while not self._closing:
             try:
                 sock, _peer = self._listener.accept()
@@ -588,6 +597,7 @@ class SocketBackend:
             ).start()
 
     def _handshake(self, sock: socket.socket) -> None:
+        # frame-consumer: register via msg
         conn = SocketConn(sock)
         try:
             if not conn.poll(_HANDSHAKE_TIMEOUT):
@@ -711,7 +721,8 @@ class SocketBackend:
                 if kind == "hb":
                     stats = msg.get("stats")
                     if stats:
-                        self._worker_stats[h.wid] = stats
+                        with self._lock:
+                            self._worker_stats[h.wid] = stats
                 elif kind == "fetch":
                     self._serve_fetch(h, msg["key"])
                 elif kind == "hello":
@@ -761,16 +772,19 @@ class SocketBackend:
                     "backend cannot ship closures across hosts"
                 )
         slots = self.slots_per_worker
+        # capacity math runs under the lock (reader threads tombstone and
+        # reset inflight maps concurrently); the sends must NOT — they are
+        # socket I/O serialized only by each handle's send_lock
         with self._lock:
             ws = [
                 h for h in self._handles.values()
                 if h.alive and len(h.inflight) < slots
                 and (worker_ids is None or h.wid in worker_ids)
             ]
+            ws.sort(key=lambda h: len(h.inflight))
+            caps = {h.wid: slots - len(h.inflight) for h in ws}
         if not ws:
             return list(leases)
-        ws.sort(key=lambda h: len(h.inflight))
-        caps = {h.wid: slots - len(h.inflight) for h in ws}
         assigned: Dict[int, List[Lease]] = {h.wid: [] for h in ws}
         rejected: List[Lease] = []
         i = 0
@@ -788,6 +802,7 @@ class SocketBackend:
             batch = assigned[h.wid]
             if not batch:
                 continue
+            frames = 1 if (self.batch_frames and len(batch) > 1) else len(batch)
             try:
                 if self.batch_frames and len(batch) > 1:
                     _send_frame(
@@ -798,8 +813,6 @@ class SocketBackend:
                              for l in batch
                          ]},
                     )
-                    self._counters["lease_frames"] += 1
-                    self._counters["lease_batches"] += 1
                 else:
                     for l in batch:
                         _send_frame(
@@ -807,12 +820,22 @@ class SocketBackend:
                             {"t": "lease", "key": l.key, "attempt": l.attempt,
                              "spec": l.spec},
                         )
-                        self._counters["lease_frames"] += 1
             except (OSError, ValueError, BrokenPipeError):
                 rejected.extend(batch)
                 continue
-            for l in batch:
-                h.inflight[l.lease_id] = l
+            with self._lock:
+                self._counters["lease_frames"] += frames
+                if self.batch_frames and len(batch) > 1:
+                    self._counters["lease_batches"] += 1
+                if not h.alive:
+                    # the worker died mid-send: its reader thread already
+                    # tombstoned (and may have reset) h.inflight — recording
+                    # these leases now would strand them invisibly, outside
+                    # both the tombstone row and the live handle's view
+                    rejected.extend(batch)
+                    continue
+                for l in batch:
+                    h.inflight[l.lease_id] = l
         return rejected
 
     def offer_to(self, lease: Lease, worker_id: int) -> bool:
@@ -830,7 +853,8 @@ class SocketBackend:
             if kind == "comp":
                 out.append(self._hydrate(h, msg))
             elif kind == "comp_batch":
-                self._counters["comp_batches"] += 1
+                with self._lock:
+                    self._counters["comp_batches"] += 1
                 for m in msg["comps"]:
                     out.append(self._hydrate(h, m))
             try:
@@ -842,7 +866,8 @@ class SocketBackend:
         """Wire completion → Manager completion: identical to the process
         backend's hydration minus the shared-memory route (results cross
         hosts as store keys, inline staged values, or explicit None)."""
-        h.inflight.pop(f"{msg['key']}#{msg['attempt']}", None)
+        with self._lock:
+            h.inflight.pop(f"{msg['key']}#{msg['attempt']}", None)
         if not msg.get("ok"):
             return Completion(
                 key=msg["key"], attempt=msg["attempt"], ok=False,
@@ -900,19 +925,23 @@ class SocketBackend:
     def stats(self) -> Dict[str, Any]:
         from repro.runtime.transport import _merge_int_tree
 
+        with self._lock:
+            per_worker = [dict(s) for s in self._worker_stats.values()]
+            n_workers = len(self._handles)
+            leader = dict(self._counters)
         worker_agg: Dict[str, Any] = {}
-        for stats in self._worker_stats.values():
+        for stats in per_worker:
             _merge_int_tree(worker_agg, stats)
         out: Dict[str, Any] = {
             "backend": self.name,
             "address": self.address,
-            "workers": len(self._handles),
+            "workers": n_workers,
             "flags": {
                 "batch_frames": self.batch_frames,
                 "warm_plans": self.warm_plans,
                 "async_commit": self.async_commit,
             },
-            "leader": dict(self._counters),
+            "leader": leader,
             "worker": worker_agg,
         }
         if self._flusher is not None:
@@ -997,7 +1026,9 @@ class SocketBackend:
     def cleanup(self) -> None:
         """Drop the backend-owned throwaway store (tempdir mode only; a
         caller-named store spec is the caller's reuse pool)."""
-        if not self._owns_store_dir or self._handles:
+        with self._lock:
+            has_handles = bool(self._handles)
+        if not self._owns_store_dir or has_handles:
             return
         import shutil
 

@@ -231,14 +231,14 @@ class InMemoryObjectStore(ObjectStore):
     ``fail_puts_once`` injects one transient put failure."""
 
     def __init__(self) -> None:
-        self._objects: Dict[str, bytes] = {}
+        self._objects: Dict[str, bytes] = {}  # guard: _lock
         self._lock = threading.Lock()
-        self.puts = 0
-        self.gets = 0
-        self.conditional_losses = 0
+        self.puts = 0  # guard: _lock
+        self.gets = 0  # guard: _lock
+        self.conditional_losses = 0  # guard: _lock
         self.fail_puts_once = False
 
-    def _maybe_fail(self) -> None:
+    def _maybe_fail(self) -> None:  # holds: _lock
         if self.fail_puts_once:
             self.fail_puts_once = False
             raise OSError("injected object-store put failure")
@@ -341,8 +341,8 @@ class ObjectBackedStore(HierarchicalStore):
         self.objstore = objstore if objstore is not None else InMemoryObjectStore()
         self._spec = spec
         self.writer_id = writer_id or f"pid{os.getpid()}"
-        self.dedup_writes = 0  # conditional-write losses (a peer won)
-        self._persisted: set = set()
+        self.dedup_writes = 0  # guard: _counters_lock
+        self._persisted: set = set()  # guard: _counters_lock
         self._counters_lock = threading.Lock()
 
     @property

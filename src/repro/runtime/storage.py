@@ -225,16 +225,16 @@ class AsyncCommitQueue:
 
     def __init__(self, store: "HierarchicalStore"):
         self._store = store
-        self._staged: Dict[str, Any] = {}
-        self._queue: "collections.deque[str]" = collections.deque()
+        self._staged: Dict[str, Any] = {}  # guard: _lock
+        self._queue: "collections.deque[str]" = collections.deque()  # guard: _lock
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._thread: Optional[threading.Thread] = None
-        self._closed = False
-        self.staged = 0
-        self.committed = 0
-        self.errors = 0
-        self.staged_peak = 0
+        self._closed = False  # guard: _lock
+        self.staged = 0  # guard: _lock
+        self.committed = 0  # guard: _lock
+        self.errors = 0  # guard: _lock
+        self.staged_peak = 0  # guard: _lock
 
     def _ensure_thread(self) -> None:
         if self._thread is None or not self._thread.is_alive():
@@ -326,17 +326,17 @@ class HierarchicalStore:
 
     def __init__(self, ram_bytes: int = 1 << 30, disk_dir: Optional[str] = None):
         self.ram_bytes = ram_bytes
-        self._ram: "collections.OrderedDict[str, Any]" = collections.OrderedDict()
-        self._sizes: Dict[str, int] = {}
-        self._used = 0
+        self._ram: "collections.OrderedDict[str, Any]" = collections.OrderedDict()  # guard: _lock
+        self._sizes: Dict[str, int] = {}  # guard: _lock
+        self._used = 0  # guard: _lock
         self._disk = pathlib.Path(disk_dir or tempfile.mkdtemp(prefix="rtf_store_"))
         self._disk.mkdir(parents=True, exist_ok=True)
         self._lock = threading.Lock()
-        self.spills = 0
-        self.hits = 0
-        self.disk_hits = 0
-        self.misses = 0
-        self.corrupt = 0
+        self.spills = 0  # guard: _lock
+        self.hits = 0  # guard: _lock
+        self.disk_hits = 0  # guard: _lock
+        self.misses = 0  # guard: _lock
+        self.corrupt = 0  # guard: _lock
         # Test/fault-injection hook: called with the tmp path after the tmp
         # file is written+fsynced but BEFORE os.replace publishes it — the
         # window a mid-write kill lands in. Raising here models the kill.
@@ -498,11 +498,12 @@ class HierarchicalStore:
         return "corrupt", None  # kept changing underneath us: give up
 
     def _disk_entry_ok(self, path: pathlib.Path) -> bool:
-        """Cheap existence+integrity probe for ``contains`` (caller holds
-        the store lock): footer magic + recorded length vs file size (no
-        digest). Quarantines on failure so ``contains`` never reports a
-        torn entry as present. A footer-less file big enough to be a legacy
-        npz is reported present optimistically — ``get`` fully validates."""
+        """Cheap existence+integrity probe for ``contains`` (runs OUTSIDE
+        the store lock — it touches the filesystem): footer magic +
+        recorded length vs file size (no digest). Quarantines on failure so
+        ``contains`` never reports a torn entry as present. A footer-less
+        file big enough to be a legacy npz is reported present
+        optimistically — ``get`` fully validates."""
         status = _probe_footer(path)
         if status == "ok":
             return True
@@ -512,10 +513,11 @@ class HierarchicalStore:
             return False
         # "short" / "bad-length": a torn entry — quarantine and report absent
         if self._maybe_quarantine(path):
-            self.corrupt += 1
+            with self._lock:
+                self.corrupt += 1
         return False
 
-    def _evict_for(self, incoming: int):
+    def _evict_for(self, incoming: int):  # holds: _lock
         """LRU-evict under the caller-held store lock; returns the evicted
         ``(key, value)`` pairs for the caller to write to disk AFTER
         releasing the lock (see ``_write_evicted``)."""
@@ -550,7 +552,12 @@ class HierarchicalStore:
 
     def contains(self, key: str) -> bool:
         with self._lock:
-            return key in self._ram or self._disk_entry_ok(self._path(key))
+            if key in self._ram:
+                return True
+        # the disk probe (footer read, possibly a quarantine — for
+        # SharedStore a flocked one) runs OUTSIDE the store lock: holding
+        # it across file I/O would serialize every RAM-tier reader
+        return self._disk_entry_ok(self._path(key))
 
     def get(self, key: str) -> Optional[Any]:
         with self._lock:
@@ -591,24 +598,26 @@ class HierarchicalStore:
             if key in self._ram:
                 self._used -= self._sizes.pop(key)
                 del self._ram[key]
-            path = self._path(key)
-            if path.exists():
-                path.unlink()
+        # the disk unlink runs OUTSIDE the store lock (same rationale as
+        # _write_evicted); a concurrent reader of the doomed key sees the
+        # entry or a miss, both of which it already had to handle
+        self._path(key).unlink(missing_ok=True)
 
     @property
     def used_bytes(self) -> int:
-        return self._used
+        return self._used  # analysis: ok[locks] racy int read, diagnostics only
 
     def counters(self) -> Dict[str, int]:
         """Point-in-time counter snapshot (the RPC workers ship this in
         their heartbeat stats; study summaries aggregate it)."""
-        return {
-            "hits": self.hits,
-            "disk_hits": self.disk_hits,
-            "misses": self.misses,
-            "spills": self.spills,
-            "corrupt": self.corrupt,
-        }
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "disk_hits": self.disk_hits,
+                "misses": self.misses,
+                "spills": self.spills,
+                "corrupt": self.corrupt,
+            }
 
 
 class SharedStore(HierarchicalStore):
@@ -647,12 +656,12 @@ class SharedStore(HierarchicalStore):
         self._manifest = self._disk / "manifest.jsonl"
         self._manifest_lockfile = self._disk / "manifest.lock"
         self._seq = 0
-        self.dedup_writes = 0  # writes skipped because a PEER committed first
+        self.dedup_writes = 0  # guard: _counters_lock (peer-committed write elisions)
         # shas this instance has itself committed (or seen committed): the
         # re-flush fast path — a repeated persist_all skips them without
         # even taking the flock. Guarded by its own lock because writes now
         # run outside the store-wide lock.
-        self._persisted: Set[str] = set()
+        self._persisted: Set[str] = set()  # guard: _counters_lock
         self._counters_lock = threading.Lock()
 
     @contextlib.contextmanager

@@ -346,7 +346,7 @@ class ThreadBackend:
     def __init__(self) -> None:
         self._threads: List[threading.Thread] = []
         self._inboxes: List["queue.Queue"] = []
-        self._inflight: List[set] = []
+        self._inflight: List[set] = []  # guard: _lock
         self._completions: "queue.Queue[Completion]" = queue.Queue()
         self._lock = threading.Lock()
 
@@ -356,7 +356,7 @@ class ThreadBackend:
         n = max(1, n_workers)
         self._completions = queue.Queue()
         self._inboxes = [queue.Queue() for _ in range(n)]
-        self._inflight = [set() for _ in range(n)]
+        self._inflight = [set() for _ in range(n)]  # analysis: ok[locks] init phase, workers start below
         self._threads = [
             threading.Thread(target=self._worker, args=(i,), daemon=True)
             for i in range(n)
@@ -421,7 +421,7 @@ class ThreadBackend:
             t.join()
         self._threads = []
         self._inboxes = []
-        self._inflight = []
+        self._inflight = []  # analysis: ok[locks] teardown, workers joined above
 
     def _worker(self, wid: int) -> None:
         inbox = self._inboxes[wid]
@@ -462,6 +462,10 @@ def _send_frame(conn, lock: threading.Lock, obj: Any) -> None:
     payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
     frame = _FRAME_HEADER.pack(len(payload)) + payload
     with lock:
+        # analysis: ok[blocking] this IS the frame-send serialization lock:
+        # its whole job is to hold across the write so concurrent senders
+        # cannot interleave torn frames on one connection; it guards no
+        # other state and is never nested inside another lock
         conn.send_bytes(frame)
 
 
@@ -737,6 +741,13 @@ class _RpcWorker:
         self._fetched: Dict[str, Dict[str, Any]] = {}
         self._stop = False
         self._shm_seq = 0
+        # single-writer counters: only the serve thread increments; the
+        # heartbeat thread snapshots racily (stale ints are fine). Every
+        # key is preset here so no increment ever RESIZES the dict under
+        # the heartbeat thread's iteration — including "reconnects",
+        # which run_worker bumps on a dict transplanted from the previous
+        # connection's worker while its heartbeat thread may still be
+        # draining.
         self.counters: Dict[str, int] = {
             "leases_run": 0,
             "plan_builds": 0,
@@ -748,6 +759,7 @@ class _RpcWorker:
             "comp_frames": 0,
             "comp_batched": 0,
             "fetches": 0,
+            "reconnects": 0,
         }
         self.workflow = None
         self.inputs: List[Any] = []
@@ -1292,15 +1304,20 @@ class ProcessRpcBackend:
         self._store = None  # leader-side mount, lazy
         self._flusher = None  # AsyncCommitQueue when async_commit
         self._live_shm: set = set()  # segments named in undecoded frames
-        self._worker_stats: Dict[int, Dict[str, Any]] = {}
-        self._counters: Dict[str, int] = {
+        self._worker_stats: Dict[int, Dict[str, Any]] = {}  # guard: _state_lock
+        self._counters: Dict[str, int] = {  # guard: _state_lock
             "lease_frames": 0,
             "lease_batches": 0,
             "comp_batches": 0,
             "fetch_serves": 0,
             "shm_recv": 0,
         }
+        # _lock serializes frame SENDS (it is the lock _send_frame takes
+        # around conn.send_bytes); _state_lock guards leader-side mutable
+        # state. Keeping them separate means no counter bump ever waits on
+        # socket I/O — and no socket I/O ever runs under the state lock.
         self._lock = threading.Lock()
+        self._state_lock = threading.Lock()
         # Session nonce scoping every result store key: minted per start(),
         # so a restarted backend (or another leader over one store_dir) can
         # never read a previous lifetime's result as its own.
@@ -1337,7 +1354,7 @@ class ProcessRpcBackend:
         import uuid
 
         self._session = uuid.uuid4().hex[:12]
-        self._worker_stats = {}
+        self._worker_stats = {}  # analysis: ok[locks] init phase, workers spawn below
         if self.async_commit:
             from repro.runtime.storage import AsyncCommitQueue
 
@@ -1414,15 +1431,19 @@ class ProcessRpcBackend:
                     "backend cannot ship closures across the boundary"
                 )
         slots = self.slots_per_worker
-        ws = [
-            h for h in self._handles
-            if h.alive and h.proc.is_alive() and len(h.inflight) < slots
-            and (worker_ids is None or h.wid in worker_ids)
-        ]
+        # inflight maps are written here (sub-pump threads) and popped by
+        # the leader pump's hydration: capacity math runs under the state
+        # lock so neither side sees a map mid-mutation
+        with self._state_lock:
+            ws = [
+                h for h in self._handles
+                if h.alive and h.proc.is_alive() and len(h.inflight) < slots
+                and (worker_ids is None or h.wid in worker_ids)
+            ]
+            ws.sort(key=lambda h: len(h.inflight))
+            caps = {h.wid: slots - len(h.inflight) for h in ws}
         if not ws:
             return list(leases)
-        ws.sort(key=lambda h: len(h.inflight))
-        caps = {h.wid: slots - len(h.inflight) for h in ws}
         assigned: Dict[int, List[Lease]] = {h.wid: [] for h in ws}
         rejected: List[Lease] = []
         i = 0
@@ -1440,6 +1461,7 @@ class ProcessRpcBackend:
             batch = assigned[h.wid]
             if not batch:
                 continue
+            frames = 1 if (self.batch_frames and len(batch) > 1) else len(batch)
             try:
                 if self.batch_frames and len(batch) > 1:
                     _send_frame(
@@ -1450,8 +1472,6 @@ class ProcessRpcBackend:
                              for l in batch
                          ]},
                     )
-                    self._counters["lease_frames"] += 1
-                    self._counters["lease_batches"] += 1
                 else:
                     for l in batch:
                         _send_frame(
@@ -1459,13 +1479,16 @@ class ProcessRpcBackend:
                             {"t": "lease", "key": l.key, "attempt": l.attempt,
                              "spec": l.spec},
                         )
-                        self._counters["lease_frames"] += 1
             except (OSError, ValueError, BrokenPipeError):
                 h.alive = False
                 rejected.extend(batch)
                 continue
-            for l in batch:
-                h.inflight[l.lease_id] = l
+            with self._state_lock:
+                self._counters["lease_frames"] += frames
+                if self.batch_frames and len(batch) > 1:
+                    self._counters["lease_batches"] += 1
+                for l in batch:
+                    h.inflight[l.lease_id] = l
         return rejected
 
     def poll_completions(self, timeout: float) -> List[Completion]:
@@ -1488,7 +1511,8 @@ class ProcessRpcBackend:
                     if kind == "comp":
                         out.append(self._hydrate(h, msg))
                     elif kind == "comp_batch":
-                        self._counters["comp_batches"] += 1
+                        with self._state_lock:
+                            self._counters["comp_batches"] += 1
                         for m in msg["comps"]:
                             out.append(self._hydrate(h, m))
                     elif kind == "fetch":
@@ -1496,7 +1520,8 @@ class ProcessRpcBackend:
                     elif kind == "hb":
                         stats = msg.get("stats")
                         if stats:
-                            self._worker_stats[h.wid] = stats
+                            with self._state_lock:
+                                self._worker_stats[h.wid] = stats
                     elif kind == "hello":
                         h.pid = msg.get("pid")
                     if not conn.poll():
@@ -1512,7 +1537,8 @@ class ProcessRpcBackend:
         value = self._flusher.peek(key) if self._flusher is not None else None
         if value is None:
             value = self.store.get(key)
-        self._counters["fetch_serves"] += 1
+        with self._state_lock:
+            self._counters["fetch_serves"] += 1
         try:
             _send_frame(
                 h.conn, self._lock,
@@ -1528,7 +1554,8 @@ class ProcessRpcBackend:
         store key), stage not-yet-durable values for the background
         flusher, and re-wrap bucket results into the executor's
         ``(outputs, executed, hits)`` shape."""
-        h.inflight.pop(f"{msg['key']}#{msg['attempt']}", None)
+        with self._state_lock:
+            h.inflight.pop(f"{msg['key']}#{msg['attempt']}", None)
         if not msg.get("ok"):
             return Completion(
                 key=msg["key"], attempt=msg["attempt"], ok=False,
@@ -1548,7 +1575,8 @@ class ProcessRpcBackend:
             self._live_shm.add(name)
             try:
                 value = shm_decode(desc)
-                self._counters["shm_recv"] += 1
+                with self._state_lock:
+                    self._counters["shm_recv"] += 1
             except BaseException:  # noqa: BLE001 — fall back to the store
                 value = _MISSING
             finally:
@@ -1583,8 +1611,12 @@ class ProcessRpcBackend:
             alive = h.alive and h.proc.is_alive()
             if not alive:
                 h.alive = False
+            # snapshot under the state lock: a sub-pump inserting into this
+            # map mid-tuple() would raise "dict changed size during iteration"
+            with self._state_lock:
+                inflight = tuple(h.inflight)
             view[h.wid] = WorkerStatus(
-                alive=alive, last_seen=h.last_seen, inflight=tuple(h.inflight)
+                alive=alive, last_seen=h.last_seen, inflight=inflight
             )
         return view
 
@@ -1600,8 +1632,11 @@ class ProcessRpcBackend:
         """Leader counters + flag settings + an across-the-pool aggregate
         of the workers' heartbeat-shipped counters (plan cache hits/builds,
         handoff route counts, task-cache and store tiers)."""
+        with self._state_lock:
+            per_worker = [dict(s) for s in self._worker_stats.values()]
+            leader = dict(self._counters)
         worker_agg: Dict[str, Any] = {}
-        for stats in self._worker_stats.values():
+        for stats in per_worker:
             _merge_int_tree(worker_agg, stats)
         out: Dict[str, Any] = {
             "backend": self.name,
@@ -1612,7 +1647,7 @@ class ProcessRpcBackend:
                 "shm_results": self.shm_results,
                 "async_commit": self.async_commit,
             },
-            "leader": dict(self._counters),
+            "leader": leader,
             "worker": worker_agg,
         }
         if self._flusher is not None:

@@ -4,9 +4,34 @@ Registers a deterministic hypothesis profile ("ci": derandomized, no
 deadline) and loads it when running under CI, so the property suites are
 reproducible run-to-run and tier-1 stays deterministic. Local runs keep
 hypothesis' default randomized exploration (profile "dev").
+
+Also arms a faulthandler watchdog for the whole session: the runtime
+suites exercise real threads, sockets, and spawned processes, and the
+historical failure mode of a concurrency bug here is a silent hang, not
+a traceback. The watchdog periodically dumps every thread's stack to
+stderr after ``REPRO_TEST_WATCHDOG`` seconds (default 600; ``0``
+disables), so a wedged run shows WHERE it is wedged instead of timing
+out mutely in CI. It never kills the run (``exit=False``) — pytest's own
+timeout machinery stays in charge of failing it.
 """
 
+import faulthandler
 import os
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _hang_watchdog():
+    timeout = float(os.environ.get("REPRO_TEST_WATCHDOG", "600"))
+    armed = timeout > 0 and hasattr(faulthandler, "dump_traceback_later")
+    if armed:
+        faulthandler.dump_traceback_later(timeout, repeat=True, exit=False)
+    try:
+        yield
+    finally:
+        if armed:
+            faulthandler.cancel_dump_traceback_later()
 
 try:
     from hypothesis import HealthCheck, settings

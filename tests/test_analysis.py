@@ -1,0 +1,588 @@
+"""Self-tests for the static-analysis suite (``repro.analysis``).
+
+Each historical bug class this repo has actually shipped (and fixed) gets a
+minimal fixture that MUST keep firing the pass that would have caught it:
+
+* the dequeue/lease race (unlocked queue write)        -> locks L201
+* the stale-memo resubmission (TOCTOU read)            -> locks L202
+* manifest I/O under the store lock                    -> blocking B401/B402
+* the stranded-item shard-death livelock (sleep held)  -> blocking B401
+* the torn manifest tail / frame schema drift          -> frames W503
+
+plus clean-code negatives so the passes don't rot into noise, and an
+integration test that holds ``src/`` itself at zero unsuppressed findings.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (
+    Baseline,
+    run_paths,
+    run_sources,
+    source_from_text,
+)
+from repro.analysis.lockmodel import collect_module
+from repro.analysis.runner import default_baseline_path, default_target
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def analyze(*texts):
+    return run_sources([source_from_text(t, f"fix{i}.py") for i, t in enumerate(texts)])
+
+
+def codes(report):
+    return sorted(f.code for f in report.findings)
+
+
+# ---------------------------------------------------------------------------
+# Pass 1 — lock discipline
+# ---------------------------------------------------------------------------
+
+DEQUEUE_RACE = """
+import threading
+
+class Manager:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queue = []  # guard: _lock
+
+    def enqueue(self, item):
+        with self._lock:
+            self._queue.append(item)
+
+    def dequeue(self):
+        if self._queue:
+            return self._queue.pop()
+        return None
+"""
+
+
+def test_dequeue_race_fires_declared_mode():
+    """The shipped bug: dequeue raced enqueue because the pop ran outside
+    the lock — an item could be leased twice. Declared mode flags both the
+    unlocked read and the unlocked write."""
+    report = analyze(DEQUEUE_RACE)
+    assert "L201" in codes(report)  # the .pop() write
+    assert "L202" in codes(report)  # the truthiness read
+    assert all(f.path == "fix0.py" for f in report.findings)
+
+
+STALE_MEMO = """
+import threading
+
+class Memo:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._done = {}  # guard: _lock
+
+    def mark(self, key, value):
+        with self._lock:
+            self._done[key] = value
+
+    def maybe_submit(self, key, submit):
+        if key in self._done:
+            return
+        submit(key)
+"""
+
+
+def test_stale_memo_toctou_read_fires():
+    """The shipped bug: a membership probe outside the lock let two pumps
+    both miss and resubmit the same key."""
+    report = analyze(STALE_MEMO)
+    assert codes(report) == ["L202"]
+    (f,) = report.findings
+    assert "maybe_submit" in f.message
+
+
+INFERENCE_RACE = """
+import threading
+
+class Counted:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._n = 0
+
+    def a(self):
+        with self._lock:
+            self._n += 1
+
+    def b(self):
+        with self._lock:
+            self._n += 1
+
+    def c(self):
+        with self._lock:
+            return self._n
+
+    def d(self):
+        with self._lock:
+            return self._n
+
+    def racy(self):
+        return self._n
+"""
+
+
+def test_inference_mode_flags_minority_unlocked_access():
+    """With no guard declarations, dominant with-lock usage (>=4 sites,
+    >=75%, at least one held write) infers the guard and flags the outlier."""
+    report = analyze(INFERENCE_RACE)
+    assert codes(report) == ["L212"]
+    (f,) = report.findings
+    assert "racy" in f.message and "inferred" in f.message
+
+
+def test_declared_mode_disables_inference():
+    """One guard declaration switches the class to declared mode: an
+    attribute with dominant-lock usage but NO declaration is not checked."""
+    text = INFERENCE_RACE.replace(
+        "self._n = 0", "self._n = 0\n        self._other = []  # guard: _lock"
+    )
+    report = analyze(text)
+    assert codes(report) == []  # _n undeclared -> ignored in declared mode
+
+
+def test_locked_suffix_and_holds_annotation_are_honoured():
+    report = analyze(
+        """
+import threading
+
+class S:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._v = 0  # guard: _lock
+
+    def bump_locked(self):
+        self._v += 1
+
+    def peek(self):  # holds: _lock
+        return self._v
+"""
+    )
+    assert codes(report) == []
+
+
+def test_inline_suppression_waives_finding():
+    text = STALE_MEMO.replace(
+        "        if key in self._done:",
+        "        # analysis: ok[locks] probe is advisory; submit() dedupes\n"
+        "        if key in self._done:",
+    )
+    report = analyze(text)
+    assert codes(report) == []
+    assert report.suppressed == 1
+
+
+def test_condition_variable_aliases_to_underlying_lock():
+    report = analyze(
+        """
+import threading
+
+class W:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._items = []  # guard: _lock
+
+    def put(self, x):
+        with self._cond:
+            self._items.append(x)
+"""
+    )
+    assert codes(report) == []
+
+
+# ---------------------------------------------------------------------------
+# Pass 1b — lock-ordering cycles
+# ---------------------------------------------------------------------------
+
+ORDER_CYCLE = """
+import threading
+
+class A:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.b = B()
+
+    def go(self):
+        with self._lock:
+            self.b.poke()
+
+class B:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.a = A()
+
+    def poke(self):
+        with self._lock:
+            self.a.go()
+"""
+
+
+def test_lock_ordering_cycle_detected():
+    report = analyze(ORDER_CYCLE)
+    assert "O301" in codes(report)
+    (f,) = [f for f in report.findings if f.code == "O301"]
+    assert "A._lock" in f.message and "B._lock" in f.message
+
+
+def test_consistent_ordering_has_no_cycle():
+    report = analyze(ORDER_CYCLE.replace(
+        "    def poke(self):\n        with self._lock:\n            self.a.go()",
+        "    def poke(self):\n        with self._lock:\n            pass",
+    ))
+    assert "O301" not in codes(report)
+
+
+# ---------------------------------------------------------------------------
+# Pass 2 — blocking calls under a held lock
+# ---------------------------------------------------------------------------
+
+IO_UNDER_LOCK = """
+import threading
+
+class ManifestWriter:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def append(self, path, row):
+        with self._lock:
+            path.write_bytes(row)
+"""
+
+
+def test_manifest_io_under_lock_fires():
+    """The shipped bug: manifest appends ran inside the store lock, so one
+    slow fsync stalled every reader."""
+    report = analyze(IO_UNDER_LOCK)
+    assert codes(report) == ["B401"]
+
+
+def test_io_one_call_level_deep_fires():
+    report = analyze(
+        """
+import os
+import threading
+
+class Store:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def save(self):
+        with self._lock:
+            self._spill()
+
+    def _spill(self):
+        os.replace("a", "b")
+"""
+    )
+    assert codes(report) == ["B402"]
+
+
+def test_shard_death_livelock_sleep_under_lock_fires():
+    """The shipped bug: the pump slept waiting for a dead shard's workers
+    while holding the scheduler lock — heartbeat expiry needed that lock to
+    re-enqueue the shard's stranded items, so the fleet livelocked."""
+    report = analyze(
+        """
+import time
+import threading
+
+class Pump:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def wait_for_shard(self, shard):
+        with self._lock:
+            while not shard.drained():
+                time.sleep(0.05)
+"""
+    )
+    assert codes(report) == ["B401"]
+    assert "time.sleep" in report.findings[0].message
+
+
+def test_io_outside_lock_is_clean():
+    report = analyze(
+        """
+import threading
+
+class Store:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._ram = {}  # guard: _lock
+
+    def commit(self, path, key, row):
+        with self._lock:
+            self._ram[key] = row
+        path.write_bytes(row)
+"""
+    )
+    assert codes(report) == []
+
+
+# ---------------------------------------------------------------------------
+# Pass 3 — wire-frame conformance
+# ---------------------------------------------------------------------------
+
+TORN_TAIL = """
+def write_manifest(conn, lock, rows):
+    _send_frame(conn, lock, {"t": "manifest", "rows": rows})
+
+def read_manifest(conn):
+    msg = _recv_frame(conn)
+    k = msg.get("t")
+    if k == "manifest":
+        rows = msg["rows"]
+        crc = msg["tail_crc"]
+        return rows, crc
+"""
+
+
+def test_frame_schema_drift_fires():
+    """The shipped bug class: a consumer grew a required field the producer
+    never sent — on the wire that read as a torn/short record."""
+    report = analyze(TORN_TAIL)
+    assert codes(report) == ["W503"]
+    assert "tail_crc" in report.findings[0].message
+
+
+def test_frame_tag_mismatches_fire_both_directions():
+    report = analyze(
+        """
+def send(conn, lock):
+    _send_frame(conn, lock, {"t": "orphaned", "n": 1})
+
+def recv(conn):
+    msg = _recv_frame(conn)
+    k = msg.get("t")
+    if k == "unknown":
+        return msg["n"]
+"""
+    )
+    assert codes(report) == ["W501", "W502"]
+
+
+def test_frames_match_across_files_and_annotations():
+    """Producers and consumers live in different modules (leader vs worker
+    file), and NotEq-style handshakes are covered by the annotation form."""
+    producer = """
+def hello(conn, lock):
+    _send_frame(conn, lock, {"t": "welcome", "wid": 3})
+"""
+    consumer = """
+def dial(conn):
+    # frame-consumer: welcome via reply
+    reply = _recv_frame(conn)
+    if reply.get("t") != "welcome":
+        return None
+    return reply["wid"]
+"""
+    report = analyze(producer, consumer)
+    assert codes(report) == []
+
+
+def test_frame_splat_producer_resolves_base_dict():
+    report = analyze(
+        """
+def announce(conn, lock, study):
+    base = {"t": "study", "round": 1}
+    _send_frame(conn, lock, {**base, "extra": study})
+
+def on_study(conn):
+    msg = _recv_frame(conn)
+    k = msg.get("t")
+    if k == "study":
+        return msg["round"], msg["missing_field"]
+"""
+    )
+    assert codes(report) == ["W503"]
+
+
+# ---------------------------------------------------------------------------
+# Pass 4 — spawn picklability & determinism
+# ---------------------------------------------------------------------------
+
+def test_lambda_into_spawn_boundary_fires():
+    report = analyze(
+        """
+def launch(backend_cls):
+    return backend_cls(build=lambda: {"model": 1})
+"""
+    )
+    assert codes(report) == ["S601"]
+
+
+def test_closure_fn_into_pool_initializer_fires():
+    report = analyze(
+        """
+def launch(Pool):
+    def init_worker():
+        pass
+    return Pool(4, initializer=init_worker)
+"""
+    )
+    assert codes(report) == ["S602"]
+
+
+def test_lambda_default_on_spawn_param_fires():
+    report = analyze(
+        """
+def start(n, build=lambda: {}):
+    return n
+"""
+    )
+    assert codes(report) == ["S603"]
+
+
+def test_module_level_fn_into_process_is_clean():
+    report = analyze(
+        """
+def worker_main(q):
+    q.put(1)
+
+def launch(Process, q):
+    return Process(target=worker_main, args=(q,))
+"""
+    )
+    assert codes(report) == []
+
+
+def test_wall_clock_in_key_derivation_fires():
+    report = analyze(
+        """
+import time
+
+def result_key(run):
+    return f"{run}-{time.time()}"
+"""
+    )
+    assert codes(report) == ["S611"]
+
+
+def test_dict_order_in_recipe_fires_and_sorted_is_clean():
+    racy = analyze(
+        """
+def recipe_key(params):
+    return tuple(params.items())
+"""
+    )
+    assert codes(racy) == ["S612"]
+    clean = analyze(
+        """
+def recipe_key(params):
+    return tuple(sorted(params.items()))
+"""
+    )
+    assert codes(clean) == []
+
+
+def test_json_dumps_without_sort_keys_fires():
+    report = analyze(
+        """
+import json
+
+def params_key(params):
+    return json.dumps(params, sort_keys=True) + json.dumps(params)
+"""
+    )
+    assert codes(report) == ["S613"]
+
+
+# ---------------------------------------------------------------------------
+# Baseline mechanics
+# ---------------------------------------------------------------------------
+
+def test_baseline_splits_known_and_stale(tmp_path):
+    report = analyze(STALE_MEMO)
+    (f,) = report.findings
+    baseline = Baseline({f.fingerprint: "legacy, tracked in #12", "locks:gone.py:L201:x": "fixed long ago"})
+    report2 = run_sources([source_from_text(STALE_MEMO, "fix0.py")], baseline)
+    assert report2.ok  # known finding is baselined out
+    assert [k.fingerprint for k in report2.baselined] == [f.fingerprint]
+    assert report2.stale == ["locks:gone.py:L201:x"]
+    assert not report2.strict_ok  # stale entries fail strict
+
+
+def test_baseline_loader_rejects_unexplained_entries(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"entries": [{"fingerprint": "locks:a.py:L201:x", "reason": ""}]}))
+    with pytest.raises(ValueError, match="unexplained"):
+        Baseline.load(p)
+
+
+def test_fingerprints_survive_line_drift():
+    shifted = "\n\n\n" + STALE_MEMO
+    a = analyze(STALE_MEMO).findings[0]
+    b = run_sources([source_from_text(shifted, "fix0.py")]).findings[0]
+    assert a.fingerprint == b.fingerprint
+    assert a.line != b.line
+
+
+# ---------------------------------------------------------------------------
+# Integration: the tree itself
+# ---------------------------------------------------------------------------
+
+def test_src_tree_is_clean_under_strict():
+    """The gate this PR establishes: zero unsuppressed findings over
+    ``src/repro`` against the checked-in baseline, and no stale entries."""
+    report = run_paths()
+    assert report.strict_ok, "\n" + report.render()
+
+
+def test_shipped_baseline_is_empty_of_entries():
+    """Real findings were fixed, deliberate design points are suppressed
+    inline with reasons — the baseline ships with no entries at all."""
+    assert Baseline.load(default_baseline_path()).entries == {}
+
+
+@pytest.mark.parametrize(
+    "rel",
+    [
+        "runtime/manager.py",
+        "runtime/transport.py",
+        "runtime/net.py",
+        "runtime/storage.py",
+        "runtime/objstore.py",
+    ],
+)
+def test_hot_modules_run_in_declared_mode(rel):
+    """Regression guard for the annotation satellite: every lock-owning
+    class in the hot runtime modules declares its guards, so the precise
+    declared-mode checks (not the heuristic inference) are what gate them."""
+    path = default_target() / rel
+    from repro.analysis.core import load_source
+
+    mod = collect_module(load_source(path, None))
+    # classes whose only locks are frame-SEND serialization locks guard a
+    # wire, not state — declared mode is about state guards
+    lock_owning = [
+        c for c in mod.classes.values()
+        if any("send" not in name for name in c.locks)
+    ]
+    assert lock_owning, f"no lock-owning classes found in {rel}?"
+    undeclared = [c.name for c in lock_owning if not c.declared]
+    assert not undeclared, (
+        f"{rel}: classes in inference mode (declare their guards): {undeclared}"
+    )
+
+
+def test_cli_strict_gate_exits_zero():
+    """`python -m repro.analysis --strict` is the CI gate — it must exit 0
+    on the shipped tree."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--strict"],
+        cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
