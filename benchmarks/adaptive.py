@@ -46,7 +46,10 @@ def run(csv: List[str]) -> None:
     n_base = 2 if SMOKE else 4
     max_rounds = 3 if SMOKE else 4
     wf = build_workflow(size, size)
-    cluster = ClusterSpec(n_workers=2)
+    # backups off: a straggler clone that wins with cache hits perturbs
+    # tasks_executed run-to-run, and this benchmark compares REUSE — the
+    # task-count delta must be the planner's doing, not the fault layer's
+    cluster = ClusterSpec(n_workers=2, enable_backup_tasks=False)
     tile = {"raw": jnp.asarray(synthetic_tile(size, size, seed=0))}
 
     ref_plan = plan_study(wf, [TABLE1_SPACE.default()], policy="rmsr", active_paths=1)
@@ -65,6 +68,10 @@ def run(csv: List[str]) -> None:
 
     def objective(leaf_state, _i):
         return 1.0 - float(dice(leaf_state["mask"], ref_mask))
+
+    # warm the OBJECTIVE's jit too (dice): the adaptive side evaluates it
+    # first and must not be charged its compile either
+    float(dice(ref_mask, ref_mask))
 
     def make_driver():
         return StudyDriver(

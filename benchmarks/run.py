@@ -8,7 +8,7 @@ traceback) and makes the harness exit non-zero after the remaining modules
 finish.
 
 Run: PYTHONPATH=src python -m benchmarks.run
-     [--only fig6,fig7,table2,fig8,streaming,adaptive,fleet,rpc,net,analysis]
+     [--only fig6,fig7,table2,fig8,streaming,adaptive,fleet,rpc,net,service,analysis]
      [--out-dir DIR]
      [--quick]   (the CI smoke profile: shrinks sizes, same pipeline;
                   equivalent to REPRO_BENCH_SMOKE=1)
@@ -49,7 +49,7 @@ def main() -> None:
         default=None,
         help=(
             "comma list: fig6,fig7,table2,fig8,streaming,adaptive,fleet,"
-            "rpc,net,analysis"
+            "rpc,net,service,analysis"
         ),
     )
     ap.add_argument(
@@ -72,7 +72,7 @@ def main() -> None:
     # so jax-free selections (--only analysis) run in a bare environment
     module_names = [
         "analysis", "fig6", "fig7", "table2", "fig8", "streaming",
-        "adaptive", "fleet", "rpc", "net",
+        "adaptive", "fleet", "rpc", "net", "service",
     ]
     if wanted:
         unknown = wanted - set(module_names) - {"roofline"}

@@ -1,0 +1,139 @@
+"""SA-as-a-service benchmark (DESIGN.md §18) — ``BENCH_service.json``.
+
+Three rows against one long-lived :class:`~repro.service.StudyServer`
+over the real pathology workflow:
+
+* **service_shared** — two tenants submit the *same* study concurrently;
+  the content-addressed shared path must execute it once (combined
+  dispatch strictly below the sum of independent submissions, asserted);
+* **service_cancel** — cancellation latency: wall time from ``cancel()``
+  until the revoked job is terminal AND the pool's queues are empty —
+  the freed-within-a-heartbeat claim, asserted well under the 60 s
+  heartbeat default;
+* **service_fairshare** — a weight-0.25 tenant's 2-run job completes
+  while a weight-1.0 tenant's multi-job grid backlog is still draining
+  (monotonic progress under contention, asserted).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.app.pipeline import pathology_service_build
+from repro.service import StudyServer, StudySpec
+
+from benchmarks.common import SMOKE
+
+
+def _dispatched(srv: StudyServer) -> int:
+    return sum(srv.manager.dispatch_counts.values())
+
+
+def run(csv: List[str]) -> None:
+    size = 24 if SMOKE else 48
+    srv = StudyServer.from_build(
+        pathology_service_build,
+        {"size": size, "n_tiles": 1 if SMOKE else 2},
+        n_workers=2,
+    )
+    try:
+        # ------------- cross-tenant dedup: combined < sum ----------------
+        solo = StudySpec(sampler="moat", n_trajectories=1, seed=3)
+        d0 = _dispatched(srv)
+        r0 = srv.result(srv.submit("solo", solo), wait=True, timeout=900)
+        assert r0["state"] == "DONE", r0
+        single = _dispatched(srv) - d0
+
+        shared = StudySpec(sampler="moat", n_trajectories=1, seed=11)
+        d1 = _dispatched(srv)
+        t0 = time.perf_counter()
+        ja = srv.submit("alice", shared)
+        jb = srv.submit("bob", shared)
+        ra = srv.result(ja, wait=True, timeout=900)
+        rb = srv.result(jb, wait=True, timeout=900)
+        t_shared = time.perf_counter() - t0
+        combined = _dispatched(srv) - d1
+        assert ra["state"] == "DONE" and rb["state"] == "DONE", (ra, rb)
+        assert ra["result"]["objective"] == rb["result"]["objective"]
+        assert combined < 2 * single, (
+            f"shared submissions must beat independent ones: "
+            f"combined={combined} vs 2x single={2 * single}"
+        )
+        csv.append(
+            f"service_shared,{t_shared * 1e6:.0f},"
+            f"tenants=2_combined={combined}_single={single}"
+            f"_saved={2 * single - combined}tasks"
+        )
+
+        # ------------- cancellation latency ------------------------------
+        sweep = StudySpec(
+            sampler="grid",
+            names=["T1", "G1"],
+            bounds={"T1": [2.5, 3.0, 3.5, 4.0], "G1": [5, 10, 15, 20]},
+        )
+        job = srv.submit("hog", sweep)
+        deadline = time.monotonic() + 120
+        while srv.status(job)["state"] == "QUEUED":
+            assert time.monotonic() < deadline, "sweep never started"
+            time.sleep(0.005)
+        t0 = time.perf_counter()
+        srv.cancel(job)
+        while (
+            srv.status(job)["state"] != "CANCELLED"
+            or srv.manager.scheduler_stats()["tenant_depths"]
+        ):
+            assert time.monotonic() < deadline, "cancel never freed the pool"
+            time.sleep(0.005)
+        latency = time.perf_counter() - t0
+        assert latency < 30.0, f"cancel latency {latency:.2f}s"
+        csv.append(
+            f"service_cancel,{latency * 1e6:.0f},"
+            f"queued_purged_and_pool_freed_lt_heartbeat"
+        )
+
+        # ------------- fair share under a heavy backlog ------------------
+        srv.set_tenant_weight("hog", 1.0)
+        srv.set_tenant_weight("mouse", 0.25)
+        hog_jobs = [
+            srv.submit(
+                "hog",
+                StudySpec(
+                    sampler="grid",
+                    names=["T1", "FH"],
+                    bounds={"T1": [2.5, 3.0, 3.5, 4.0][: 2 if SMOKE else 4]},
+                ),
+            ),
+            srv.submit(
+                "hog",
+                StudySpec(
+                    sampler="grid",
+                    names=["T2", "RC"],
+                    bounds={"T2": [2.5, 3.0, 3.5, 4.0][: 2 if SMOKE else 4]},
+                ),
+            ),
+        ]
+        t0 = time.perf_counter()
+        mouse = srv.submit(
+            "mouse",
+            StudySpec(sampler="explicit", param_sets=[{}, {"FH": 4}]),
+        )
+        rm = srv.result(mouse, wait=True, timeout=900)
+        t_mouse = time.perf_counter() - t0
+        assert rm["state"] == "DONE", rm
+        hog_done = [
+            srv.result(j, wait=True, timeout=900)["finished_at"]
+            for j in hog_jobs
+        ]
+        assert rm["finished_at"] <= max(hog_done), (
+            "low-weight tenant starved behind the hog backlog"
+        )
+        dispatch = srv.manager.scheduler_stats()["tenant_dispatch"]
+        csv.append(
+            f"service_fairshare,{t_mouse * 1e6:.0f},"
+            f"mouse_weight=0.25_done_before_backlog_drained"
+            f"_dispatch_mouse={dispatch.get('mouse', 0)}"
+            f"_hog={dispatch.get('hog', 0)}"
+        )
+    finally:
+        srv.close()

@@ -39,9 +39,27 @@ from repro.engine.types import (
     StudyResult,
     StudyStreamResult,
 )
-from repro.runtime.manager import Manager, WorkItem
+from repro.runtime.manager import Manager, TaskCancelled, WorkItem
 
-__all__ = ["execute_study"]
+__all__ = ["execute_study", "study_task_keys"]
+
+
+def study_task_keys(
+    plan: "StudyPlan", n_inputs: int, key_prefix: str = ""
+) -> List[str]:
+    """The complete, deterministic list of WorkItem keys ``execute_study``
+    will submit for ``plan`` over ``n_inputs`` inputs. The service registry
+    precomputes these for admission control (task quotas), per-job
+    refcounting and cancellation — no callback channel from the executor
+    is needed, because keys are a pure function of (plan, input index)."""
+    keys: List[str] = []
+    for i in range(n_inputs):
+        for sp in plan.stages:
+            for bi in range(len(sp.buckets)):
+                keys.append(
+                    f"{key_prefix}in{i}:{sp.index}:{sp.stage.name}:{bi}"
+                )
+    return keys
 
 # Unique plan ids for spec-capable backends: an external Manager session
 # may execute many plans (adaptive rounds), and worker processes cache the
@@ -79,6 +97,11 @@ def execute_study(
     hierarchy: Any = None,
     input_keys: Optional[Sequence[Any]] = None,
     key_prefix: str = "",
+    shared: bool = False,
+    tenant: str = "",
+    priority: int = 0,
+    cancel_event: Optional[threading.Event] = None,
+    on_progress: Optional[Any] = None,
 ) -> StudyStreamResult:
     """Execute a :class:`StudyPlan` on every input in ``inputs``, pipelined
     through one persistent Manager session.
@@ -125,6 +148,27 @@ def execute_study(
     plan_id, input, stage, bucket)`` spec. Workers resolve stage inputs
     from the shared store by deterministic result keys and commit outputs
     back the same way, so only store keys ever cross the process boundary.
+
+    **Service mode** (DESIGN.md §18), all default-off:
+
+    * ``shared``      — submit WorkItems as content-addressed shared work:
+      a key another concurrent study already has pending subscribes this
+      study's callback instead of executing twice, and a settled key is
+      served from the Manager memo. Requires a ``key_prefix`` derived from
+      task CONTENT (the service hashes the study recipe) so identical keys
+      always denote identical pure work. In shared mode the study waits on
+      its own completion event instead of ``mgr.drain()`` (other tenants'
+      work may still be pending in the session) and does NOT ``forget``
+      its keys — the owner (the service registry) releases them when no
+      live job references them.
+    * ``tenant`` / ``priority`` — fair-share class and within-tenant
+      dispatch priority stamped on every WorkItem (Manager DRR dispatch).
+    * ``cancel_event`` — when set, no further stages are submitted and
+      the study raises :class:`TaskCancelled`; the owner is responsible
+      for revoking in-flight keys via ``mgr.cancel`` (only those no other
+      job references).
+    * ``on_progress`` — ``on_progress(done, total)`` called after every
+      settled bucket (Manager pump thread; must be cheap and non-raising).
     """
     cluster = cluster or plan.cluster or ClusterSpec()
     inputs = list(inputs)
@@ -181,16 +225,31 @@ def execute_study(
     errors: List[BaseException] = []
     lock = threading.Lock()
     n_stages = len(plan.stages)
+    total_tasks = sum(len(sp.buckets) for sp in plan.stages) * len(inputs)
 
     submitted: List[str] = []  # list.append is atomic; drained before reads
+    # Shared-mode completion accounting (guarded by ``lock``): submitted-
+    # but-unsettled keys, settled count, and whether the initial per-input
+    # seeding loop is still running (so a tiny study finishing its first
+    # input before the second is seeded cannot signal done prematurely).
+    outstanding = [0]
+    done_tasks = [0]
+    seeding = [True]
+    done_event = threading.Event()
 
     def submit_stage(i: int, si: int) -> None:
+        if cancel_event is not None and cancel_event.is_set():
+            return
         stage_plan = plan.stages[si]
         st = states[i]
         for bi, bucket in enumerate(stage_plan.buckets):
             src = st.current[bucket.run_ids[0]]
             key = f"{key_prefix}in{i}:{stage_plan.index}:{stage_plan.stage.name}:{bi}"
             submitted.append(key)
+            with lock:
+                outstanding[0] += 1
+            # a shared submit of an already-settled key fires the callback
+            # synchronously on THIS thread — the lock is not held here
             mgr.submit(
                 WorkItem(
                     key=key,
@@ -206,6 +265,9 @@ def execute_study(
                     # worker), then the bucket's trie scope
                     path=(f"{key_prefix}{input_keys[i]}",) + bucket.cache_scope,
                     callback=lambda _key, value, i=i, si=si: on_bucket(i, si, value),
+                    shared=shared,
+                    tenant=tenant,
+                    priority=priority,
                 )
             )
 
@@ -220,30 +282,39 @@ def execute_study(
             st.remaining[si] -= 1
             if isinstance(value, Exception):
                 errors.append(value)
-                return
-            bucket_results, executed, hits = value
-            st.executed[si] += executed
-            st.hits[si] += hits
-            st.routed.update(bucket_results)
-            if st.remaining[si] == 0:
-                missing = set(range(plan.n_runs)) - set(st.routed)
-                if missing:
-                    errors.append(
-                        RuntimeError(
-                            f"input {i}: stage {plan.stages[si].stage.name!r} "
-                            f"produced no output for {len(missing)} runs "
-                            f"(first: {sorted(missing)[:5]})"
+            else:
+                bucket_results, executed, hits = value
+                st.executed[si] += executed
+                st.hits[si] += hits
+                st.routed.update(bucket_results)
+                if st.remaining[si] == 0:
+                    missing = set(range(plan.n_runs)) - set(st.routed)
+                    if missing:
+                        errors.append(
+                            RuntimeError(
+                                f"input {i}: stage {plan.stages[si].stage.name!r} "
+                                f"produced no output for {len(missing)} runs "
+                                f"(first: {sorted(missing)[:5]})"
+                            )
                         )
-                    )
-                    return
-                st.current = st.routed  # run_id-routed dataflow, next stage
-                st.routed = {}
-                if si + 1 < n_stages:
-                    advance = True
-                else:
-                    st.t_done = time.perf_counter()
+                    else:
+                        st.current = st.routed  # run_id-routed dataflow
+                        st.routed = {}
+                        if si + 1 < n_stages:
+                            advance = True
+                        else:
+                            st.t_done = time.perf_counter()
         if advance:
             submit_stage(i, si + 1)
+        done = 0
+        with lock:
+            outstanding[0] -= 1
+            done_tasks[0] += 1
+            done = done_tasks[0]
+            if outstanding[0] == 0 and not seeding[0]:
+                done_event.set()
+        if on_progress is not None:
+            on_progress(done, total_tasks)
 
     t0 = time.perf_counter()
     if owns_manager:
@@ -265,13 +336,30 @@ def execute_study(
         for i in range(len(inputs)):
             states[i].t_submit = time.perf_counter()
             submit_stage(i, 0)
-        mgr.drain()
+        with lock:
+            seeding[0] = False
+            if outstanding[0] == 0:
+                done_event.set()
+        if shared:
+            # wait for THIS study's keys only — mgr.drain() would also
+            # wait on every other tenant's pending work in the session
+            while not done_event.wait(0.05):
+                if cancel_event is not None and cancel_event.is_set():
+                    break
+            if not done_event.is_set():
+                raise TaskCancelled(
+                    f"study cancelled: {key_prefix or '<unprefixed>'}"
+                )
+        else:
+            mgr.drain()
     finally:
         if owns_manager:
             mgr.close()
-        else:
+        elif not shared:
             # shared session: outputs were consumed via callbacks; release
-            # the memoised results so a many-round study stays bounded
+            # the memoised results so a many-round study stays bounded.
+            # (In shared mode the service registry owns the release — keys
+            # may still be referenced by other live jobs.)
             mgr.forget(submitted)
     if errors:
         raise errors[0]

@@ -3,6 +3,7 @@ transport-agnostic WorkerBackend boundary (threads or RPC worker
 processes), hierarchical storage, fault tolerance (heartbeats/retry/backup
 tasks), elastic scaling, and the paper-scale cluster simulator."""
 
+from repro.runtime.fairshare import FairQueue, TaskCancelled  # noqa: F401
 from repro.runtime.hierarchy import (  # noqa: F401
     HierarchySpec,
     parse_hierarchy,

@@ -65,6 +65,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.runtime.fairshare import FairQueue, TaskCancelled
 from repro.runtime.hierarchy import (
     HierarchySpec,
     best_affinity,
@@ -79,7 +80,7 @@ from repro.runtime.transport import (
     make_backend,
 )
 
-__all__ = ["WorkItem", "Manager", "run_study_distributed"]
+__all__ = ["WorkItem", "Manager", "TaskCancelled", "run_study_distributed"]
 
 # How many queue-head items a sub-pump scans for the best affinity match
 # before falling back to FIFO — bounds locality search per dispatch.
@@ -88,6 +89,11 @@ _AFFINITY_WINDOW = 8
 # How long the pump blocks per completion poll; bounds the latency of
 # straggler/heartbeat detection while the system is idle.
 _IDLE_TICK = 0.02
+# Parked-pump wake cadence: an idle pool still owes the backend a slow
+# heartbeat-frame drain (worker stats ride heartbeats, and a straggler
+# lease orphaned by cancel/resubmit completes late and must be consumed)
+# — so the park is a timed wait, ~25x sparser than the busy-poll tick.
+_PARK_TICK = 0.5
 
 # A worker heartbeat younger than this proves its leases live (only for
 # backends whose heartbeats keep flowing mid-task); staler workers fall
@@ -121,6 +127,19 @@ class WorkItem:
     # hierarchical scheduler routes it toward the sub-manager/worker whose
     # affinity shares the longest common prefix. None opts out of locality.
     path: Optional[tuple] = None
+    # Fair-share class (DESIGN.md §18): the dispatch queue deficit-round-
+    # robins across tenants, so one tenant's backlog cannot starve another.
+    # "" is the shared default class (single-study sessions stay pure FIFO).
+    tenant: str = ""
+    # Within-tenant dispatch priority: higher first, FIFO within a level.
+    priority: int = 0
+    # Content-addressed sharing (the service's cross-tenant reuse): a shared
+    # submission of a key that is already pending SUBSCRIBES its callback to
+    # the in-flight lifecycle instead of enqueueing a duplicate execution,
+    # and a shared submission of a settled key is served the memoised value
+    # immediately. Requires keys derived from task CONTENT, so identical
+    # keys always denote identical pure work.
+    shared: bool = False
 
 
 class _SubPump:
@@ -131,7 +150,8 @@ class _SubPump:
 
     __slots__ = (
         "idx", "worker_ids", "queue", "dispatched", "steals",
-        "stolen_items", "busy_seconds", "thread", "dead",
+        "stolen_items", "busy_seconds", "parked_seconds", "parked_since",
+        "thread", "dead",
     )
 
     def __init__(self, idx: int, worker_ids) -> None:
@@ -142,6 +162,10 @@ class _SubPump:
         self.steals = 0        # times this pump stole a block
         self.stolen_items = 0  # items it acquired by stealing
         self.busy_seconds = 0.0
+        self.parked_seconds = 0.0  # time parked on the Manager condvar
+        # park-in-progress start time, so stats taken MID-park still see
+        # the elapsed idle (folded into parked_seconds when the park ends)
+        self.parked_since: Optional[float] = None
         self.thread: Optional[threading.Thread] = None
         self.dead = False
 
@@ -180,17 +204,27 @@ class Manager:
         self._worker_busy: Dict[int, float] = {}  # guard: _lock
         self._n_workers = 0  # guard: _lock
         self._pump_busy = 0.0  # guard: _lock — leader-pump seconds spent doing work
+        # Idle-pool accounting (DESIGN.md §18): seconds the leader pump has
+        # spent parked on the condition variable with zero pending work, and
+        # the start of an in-progress park — scheduler_stats subtracts this
+        # from wall time so idle fractions stay honest across the many-job
+        # lifetime of a long-lived service session.
+        self._pump_parked = 0.0  # guard: _lock
+        self._parked_since: Optional[float] = None  # guard: _lock
         self._session_t0: Optional[float] = None  # guard: _lock
         self._session_t1: Optional[float] = None  # guard: _lock
         self.steals = 0  # guard: _lock
         self.steal_items = 0  # guard: _lock
         self.locality_hits = 0  # guard: _lock
         self.locality_misses = 0  # guard: _lock
-        self._queue: "collections.deque[WorkItem]" = collections.deque()  # guard: _lock
+        self._queue: FairQueue = FairQueue()  # guard: _lock
         self._results: Dict[str, Any] = {}  # guard: _lock
         self._running: Dict[str, WorkItem] = {}  # guard: _lock
         self._attempt_seq: Dict[str, int] = {}  # guard: _lock — highest attempt # issued per key
-        self._callbacks: Dict[str, Callable[[str, Any], None]] = {}  # guard: _lock
+        # key -> callbacks subscribed to its first completion. A list, not a
+        # single slot: shared (content-addressed) submissions subscribe many
+        # jobs to one lifecycle; every callback fires exactly once.
+        self._callbacks: Dict[str, List[Callable[[str, Any], None]]] = {}  # guard: _lock
         self._pending: set = set()  # guard: _lock — keys submitted, no result yet
         # Keys forgotten while still holding a lease: their bookkeeping is
         # kept for first-completion-wins dedup and released when the last
@@ -219,10 +253,14 @@ class Manager:
         self.retries = 0  # guard: _lock
         self.backups_launched = 0  # guard: _lock
         self.heartbeat_expiries = 0  # guard: _lock
+        self.cancelled = 0  # guard: _lock — keys revoked via cancel()
         # Leases handed to each backend (keyed by backend name) over this
         # Manager's lifetime — the per-backend dispatch accounting surfaced
         # by study summaries.
         self.dispatch_counts: Dict[str, int] = {}  # guard: _lock
+        # Leases minted per fair-share tenant — the service/benchmark proof
+        # that deficit-round-robin actually shares the dispatch path.
+        self.tenant_dispatch: Dict[str, int] = {}  # guard: _lock
 
     @property
     def backend(self):
@@ -259,6 +297,16 @@ class Manager:
             t0 = self._session_t0
             t1 = self._session_t1 if self._session_t1 is not None else now
             wall = max(t1 - t0, 1e-9) if t0 is not None else 0.0
+            parked = self._pump_parked
+            if self._parked_since is not None and self._session_t1 is None:
+                parked += now - self._parked_since
+            # Idle fractions are measured against ACTIVE wall — session
+            # wall minus the time the pump sat parked with zero pending
+            # work — so a long-lived session that served three jobs over
+            # an hour reports how busy the workers were while there WAS
+            # work, not how empty the hour was.
+            active = max(wall - parked, 0.0)
+            denom = active if active > 1e-9 else wall
             hits, misses = self.locality_hits, self.locality_misses
             worker_busy = dict(self._worker_busy)
             n_workers = max(1, self._n_workers)
@@ -272,19 +320,37 @@ class Manager:
                 "locality_hit_rate": (
                     hits / (hits + misses) if (hits + misses) else 0.0
                 ),
-                "pump_occupancy": self._pump_busy / wall if wall else 0.0,
+                "pump_occupancy": self._pump_busy / denom if denom else 0.0,
+                "pump_parked_seconds": parked,
+                "active_wall_seconds": active,
                 "sub_occupancy": [
-                    s.busy_seconds / wall if wall else 0.0 for s in self._subs
+                    s.busy_seconds / denom if denom else 0.0
+                    for s in self._subs
+                ],
+                "sub_parked_seconds": [
+                    s.parked_seconds
+                    + (now - s.parked_since if s.parked_since is not None else 0.0)
+                    for s in self._subs
                 ],
                 "dispatched_per_sub": [s.dispatched for s in self._subs],
                 "steals_per_sub": [s.steals for s in self._subs],
                 "worker_busy_seconds": worker_busy,
                 "worker_idle_fraction": (
-                    1.0 - sum(worker_busy.values()) / (wall * n_workers)
-                    if wall
+                    min(
+                        1.0,
+                        max(
+                            0.0,
+                            1.0
+                            - sum(worker_busy.values()) / (denom * n_workers),
+                        ),
+                    )
+                    if denom
                     else 0.0
                 ),
                 "wall_seconds": wall,
+                "cancelled": self.cancelled,
+                "tenant_dispatch": dict(self.tenant_dispatch),
+                "tenant_depths": self._queue.depths(),
             }
         return stats
 
@@ -358,13 +424,23 @@ class Manager:
         completions are dropped on arrival — they may have run under a
         different scope, so their values must never settle this
         lifecycle), and attempt numbering continues from the old high
-        water mark so lease ids stay unique across lifecycles."""
+        water mark so lease ids stay unique across lifecycles.
+
+        ``item.shared`` opts into **content-addressed sharing** (DESIGN.md
+        §18): a shared submission of a key already pending subscribes its
+        callback to the in-flight lifecycle (no duplicate execution), and
+        a shared submission of a settled key is served the memoised value
+        immediately — the mechanism by which N tenants submitting
+        identical pure work pay for it once."""
+        memo_value: Any = None
+        serve_memo = False
         with self._cond:
             if self._state in (_CLOSING, _CLOSED):
                 raise RuntimeError("Manager session is closed")
             if item.key in self._deferred_forget:
                 self._deferred_forget.discard(item.key)
                 self._results.pop(item.key, None)
+                self._callbacks.pop(item.key, None)
                 for lid in [
                     lid for lid, it in self._running.items() if it.key == item.key
                 ]:
@@ -373,10 +449,7 @@ class Manager:
                 # queued duplicates (heartbeat-expiry re-enqueues racing in
                 # after forget) carry the OLD lifecycle's closure — purge
                 # every queue they may sit in (global + delegated shards)
-                if any(it.key == item.key for it in self._queue):
-                    self._queue = collections.deque(
-                        it for it in self._queue if it.key != item.key
-                    )
+                self._queue.remove_keys({item.key})
                 for sub in self._subs:
                     if any(it.key == item.key for it in sub.queue):
                         sub.queue = collections.deque(
@@ -384,12 +457,38 @@ class Manager:
                         )
                 item.attempt_base = self._attempt_seq.get(item.key, 0)
             if item.key in self._results:
-                return
-            if item.callback is not None:
-                self._callbacks[item.key] = item.callback
-            self._pending.add(item.key)
-            self._queue.append(item)
-            self._cond.notify()
+                if item.shared and item.callback is not None:
+                    # served the live memo below, OUTSIDE the lock — the
+                    # callback may re-enter submit()
+                    serve_memo = True
+                    memo_value = self._results[item.key]
+                # historical contract: non-shared resubmit of a settled
+                # key is a silent no-op
+            elif (
+                item.shared
+                and item.key in self._pending
+            ):
+                # subscribe to the in-flight lifecycle: exactly-once per
+                # subscriber, zero duplicate execution
+                if item.callback is not None:
+                    self._callbacks.setdefault(item.key, []).append(
+                        item.callback
+                    )
+            else:
+                if item.callback is not None:
+                    if item.shared:
+                        self._callbacks.setdefault(item.key, []).append(
+                            item.callback
+                        )
+                    else:
+                        # historical single-slot semantics: the latest
+                        # non-shared submission's callback wins
+                        self._callbacks[item.key] = [item.callback]
+                self._pending.add(item.key)
+                self._queue.append(item)
+                self._cond.notify_all()
+        if serve_memo:
+            item.callback(item.key, memo_value)
 
     def drain(self) -> None:
         """Block until every submitted key has a result (success or
@@ -432,6 +531,8 @@ class Manager:
         if pump is not None:
             pump.join()
         self._sub_stop.set()
+        with self._cond:
+            self._cond.notify_all()  # unpark sub-pumps so they see the stop
         for sub in self._subs:
             if sub.thread is not None:
                 sub.thread.join()
@@ -467,29 +568,89 @@ class Manager:
             keyset = set(keys)
             if not keyset:
                 return
-            self._queue = collections.deque(
-                it for it in self._queue if it.key not in keyset
-            )
+            self._queue.remove_keys(keyset)
             for sub in self._subs:
                 if any(it.key in keyset for it in sub.queue):
                     sub.queue = collections.deque(
                         it for it in sub.queue if it.key not in keyset
                     )
             leased = {it.key for it in self._running.values()}
-            self._deferred_forget |= keyset & leased
-            for k in keyset - leased:
+            # Keys with an outstanding ORPHANED lease are held too: their
+            # drop-marker carries a lease id minted from the key's attempt
+            # sequence, so releasing the sequence now would let a future
+            # lifecycle re-mint a colliding id and have its completion
+            # silently dropped. They drain when the orphan settles/dies.
+            orphan_keys = {
+                lid.rsplit("#", 1)[0] for lid in self._orphaned
+            }
+            self._deferred_forget |= keyset & (leased | orphan_keys)
+            for k in keyset - leased - orphan_keys:
                 self._results.pop(k, None)
                 self._attempt_seq.pop(k, None)
                 self._callbacks.pop(k, None)
+
+    def cancel(self, keys) -> List[str]:
+        """Revoke submitted-but-unsettled keys (DESIGN.md §18): queued
+        work is purged from every queue (global + delegated shards), live
+        leases are poisoned (their ids join the orphan set, so the
+        worker's eventual completion is dropped on arrival — the worker
+        itself is not interrupted mid-task), and each revoked key settles
+        exactly once with :class:`TaskCancelled` as its value, firing its
+        callbacks like any other permanent failure. Keys already settled
+        or never submitted are left untouched. Returns the keys actually
+        cancelled.
+
+        After cancel, ``forget`` + re-``submit`` of the same key starts a
+        clean new lifecycle: attempt numbering continues from the high
+        water mark, so a straggling poisoned lease can never collide with
+        — or settle — the new lifecycle."""
+        cancelled: List[str] = []
+        with self._cond:
+            keyset = set(keys)
+            if not keyset:
+                return cancelled
+            live = {
+                k for k in keyset
+                if k in self._pending and k not in self._results
+            }
+            if not live:
+                return cancelled
+            self._queue.remove_keys(live)
+            for sub in self._subs:
+                if any(it.key in live for it in sub.queue):
+                    sub.queue = collections.deque(
+                        it for it in sub.queue if it.key not in live
+                    )
+            for lid, it in list(self._running.items()):
+                if it.key in live:
+                    self._orphaned.add(lid)
+                    del self._running[lid]
+            cancelled = sorted(live)
+            self.cancelled += len(cancelled)
+        # settle outside the lock: callbacks may re-enter submit()
+        for key in cancelled:
+            self._settle(key, 0, TaskCancelled(f"cancelled: {key!r}"), None)
+        return cancelled
+
+    def set_tenant_weight(self, tenant: str, weight: float) -> None:
+        """Set a fair-share tenant's dispatch quantum (default 1.0; higher
+        drains proportionally faster, floor-clamped so every tenant keeps
+        making progress)."""
+        with self._lock:
+            self._queue.set_weight(tenant, weight)
 
     def _drain_deferred_locked(self, key: str) -> None:
         """Release a deferred-forgotten key's bookkeeping once its LAST
         lease has been returned (caller holds the lock and has already
         popped its own lease). While any other attempt is still in flight
-        the memoised result must survive so the late completion dedups."""
+        — including a poisoned orphan whose drop-marker was minted from
+        this key's attempt sequence — the bookkeeping must survive so the
+        late completion dedups instead of colliding."""
         if key not in self._deferred_forget:
             return
         if any(it.key == key for it in self._running.values()):
+            return
+        if any(lid.rsplit("#", 1)[0] == key for lid in self._orphaned):
             return
         self._deferred_forget.discard(key)
         self._results.pop(key, None)
@@ -527,6 +688,9 @@ class Manager:
         item.attempts = self._attempt_seq.get(item.key, 0) + 1
         self._attempt_seq[item.key] = item.attempts
         self._running[f"{item.key}#{item.attempts}"] = item
+        self.tenant_dispatch[item.tenant] = (
+            self.tenant_dispatch.get(item.tenant, 0) + 1
+        )
 
     # -- hierarchical scheduling (leader + sub-manager pumps) ----------
     def _route_locked(self, item: WorkItem) -> Optional[_SubPump]:
@@ -661,7 +825,17 @@ class Manager:
         vanished between the demand snapshot and the offer — e.g. a worker
         died). The attempt number is returned too: nothing outside this
         process ever observed it."""
-        self._running.pop(f"{item.key}#{item.attempts}", None)
+        lid = f"{item.key}#{item.attempts}"
+        if lid in self._orphaned:
+            # the lease was cancelled/orphaned between minting and the
+            # rejected offer: the drop-marker has done its job (nothing
+            # was ever dispatched) — discard it WITHOUT reverting the
+            # attempt sequence, so the marker's id can never be re-minted
+            # by the key's next lifecycle.
+            self._orphaned.discard(lid)
+            self._drain_deferred_locked(item.key)
+            return
+        self._running.pop(lid, None)
         if self._attempt_seq.get(item.key) == item.attempts:
             self._attempt_seq[item.key] = item.attempts - 1
         if item.key not in self._results:
@@ -684,7 +858,11 @@ class Manager:
                 if item is None:
                     # an orphaned lease dies with its worker: no completion
                     # will ever arrive to drain its drop-marker
-                    self._orphaned.discard(lease_id)
+                    if lease_id in self._orphaned:
+                        self._orphaned.discard(lease_id)
+                        self._drain_deferred_locked(
+                            lease_id.rsplit("#", 1)[0]
+                        )
                     continue
                 self.heartbeat_expiries += 1
                 if item.key in self._results:
@@ -697,9 +875,11 @@ class Manager:
                     self.retries += 1
                     self._queue.append(
                         WorkItem(key=item.key, fn=item.fn, spec=item.spec,
-                                 attempt_base=item.attempt_base)
+                                 attempt_base=item.attempt_base,
+                                 path=item.path, tenant=item.tenant,
+                                 priority=item.priority)
                     )
-                    self._cond.notify()
+                    self._cond.notify_all()
                 elif not any(
                     it.key == item.key for it in self._running.values()
                 ):
@@ -763,8 +943,10 @@ class Manager:
             self.heartbeat_expiries += 1
             self.retries += 1
             self._queue.append(WorkItem(key=it.key, fn=it.fn, spec=it.spec,
-                                        attempt_base=it.attempt_base))
-            self._cond.notify()
+                                        attempt_base=it.attempt_base,
+                                        path=it.path, tenant=it.tenant,
+                                        priority=it.priority))
+            self._cond.notify_all()
 
     def _maybe_backup_locked(self) -> Optional[WorkItem]:
         """Clone the longest-running bucket if it looks like a straggler.
@@ -792,7 +974,9 @@ class Manager:
         if age > self.straggler_factor * max(median, 1e-3):
             self.backups_launched += 1
             return WorkItem(key=worst.key, fn=worst.fn, spec=worst.spec,
-                            attempt_base=worst.attempt_base)
+                            attempt_base=worst.attempt_base,
+                            path=worst.path, tenant=worst.tenant,
+                            priority=worst.priority)
         return None
 
     def _sub_pump(self, sub: _SubPump) -> None:
@@ -817,6 +1001,27 @@ class Manager:
         offer_batch = getattr(backend, "offer_batch", None)
         slots = max(1, int(getattr(backend, "slots_per_worker", 1)))
         while not self._sub_stop.is_set():
+            # Same idle-pool parking as the leader: with zero pending work
+            # the shard pump blocks on the Manager condvar instead of
+            # spinning on heartbeat snapshots. Woken by submit()/close()/
+            # the leader's delegation notify; state changes and sub-errors
+            # break the predicate so shutdown is never missed.
+            with self._cond:
+                if (
+                    self._state == _RUNNING
+                    and self._sub_error is None
+                    and not self._sub_stop.is_set()
+                    and not self._pending
+                    and not self._running
+                    and not self._queue
+                    and not any(s.queue for s in self._subs)
+                ):
+                    t_park = time.monotonic()
+                    sub.parked_since = t_park
+                    self._cond.wait()
+                    sub.parked_seconds += time.monotonic() - t_park
+                    sub.parked_since = None
+                    continue
             view = backend.heartbeat_view()
             alive = {
                 wid: st
@@ -840,7 +1045,10 @@ class Manager:
                 max(0, slots - len(st.inflight)) for st in alive.values()
             )
             if free <= 0:
-                time.sleep(_IDLE_TICK)
+                # all shard slots busy: wait a tick (woken early by any
+                # settle/submit notify) instead of a blind sleep
+                with self._cond:
+                    self._cond.wait(_IDLE_TICK)
                 continue
             if self._hier.steal:
                 with self._cond:
@@ -856,7 +1064,8 @@ class Manager:
             if did:
                 sub.busy_seconds += time.monotonic() - t0
             else:
-                time.sleep(_IDLE_TICK)
+                with self._cond:
+                    self._cond.wait(_IDLE_TICK)
 
     def _sub_dispatch_targeted(
         self, sub: _SubPump, alive: Dict[int, WorkerStatus], slots: int,
@@ -941,7 +1150,7 @@ class Manager:
         the callback returns, so ``drain`` cannot observe a momentarily-empty
         pending set while a callback is still about to submit downstream
         work (the per-input stage edge of the streaming executor)."""
-        cb = None
+        cbs: Optional[List[Callable[[str, Any], None]]] = None
         won = False
         with self._cond:
             self._running.pop(f"{key}#{attempt}", None)
@@ -950,14 +1159,17 @@ class Manager:
                 self._results[key] = value
                 if duration is not None and not isinstance(value, Exception):
                     self._record_duration_locked(duration)
-                cb = self._callbacks.pop(key, None)
+                cbs = self._callbacks.pop(key, None)
             self._drain_deferred_locked(key)
             self._cond.notify_all()
         if not won:  # raced duplicate: the winner owns callback + pending
             return
         try:
-            if cb is not None:
-                cb(key, value)
+            if cbs:
+                # every subscriber of the lifecycle fires exactly once —
+                # shared submissions fan one completion out to many jobs
+                for cb in cbs:
+                    cb(key, value)
         finally:
             with self._cond:
                 self._pending.discard(key)
@@ -966,9 +1178,12 @@ class Manager:
     def _handle_completion(self, comp: Completion) -> None:
         with self._cond:
             if comp.lease_id in self._orphaned:
-                # a lease stranded by its key's resubmission (new
-                # lifecycle): the value may be from another scope — drop it
+                # a lease stranded by its key's resubmission or
+                # cancellation (new lifecycle): the value may be from
+                # another scope — drop it. The marker may have been the
+                # last thing pinning a deferred-forgotten key.
                 self._orphaned.discard(comp.lease_id)
+                self._drain_deferred_locked(comp.key)
                 return
             item = self._running.get(comp.lease_id)
             if comp.worker_id is not None:
@@ -1000,9 +1215,11 @@ class Manager:
                 # attempt numbers are issued by _next_locked at lease time
                 self._queue.append(
                     WorkItem(key=item.key, fn=item.fn, spec=item.spec,
-                             attempt_base=item.attempt_base)
+                             attempt_base=item.attempt_base,
+                             path=item.path, tenant=item.tenant,
+                             priority=item.priority)
                 )
-                self._cond.notify()
+                self._cond.notify_all()
                 return
             if item is None and comp.key not in self._results:
                 # the lease was already expired and re-driven; this late
@@ -1052,12 +1269,52 @@ class Manager:
             with self._cond:
                 if self._session_t1 is None:
                     self._session_t1 = time.monotonic()
+                if self._parked_since is not None:
+                    self._pump_parked += (
+                        time.monotonic() - self._parked_since
+                    )
+                    self._parked_since = None
+                self._cond.notify_all()  # unpark sub-pumps: stop is set
 
     def _pump_loop(self) -> None:
         backend = self._backend
         hier = bool(self._subs)
         while True:
-            comps = backend.poll_completions(_IDLE_TICK)
+            # Idle-pool parking (DESIGN.md §18): with zero pending work —
+            # nothing queued anywhere, no leases in flight — a long-lived
+            # session's pump parks on the condition variable instead of
+            # busy-polling the backend every tick. submit()/close() wake
+            # it with notify_all; the first post-wake completion poll is
+            # non-blocking so freshly submitted work dispatches
+            # immediately instead of riding out a sleeping poll (this is
+            # the adaptive driver's round-boundary stall).
+            just_woke = False
+            with self._cond:
+                if (
+                    self._state == _RUNNING
+                    and self._sub_error is None
+                    and not self._pending
+                    and not self._running
+                    and not self._orphaned
+                    and not self._queue
+                    and not any(s.queue for s in self._subs)
+                ):
+                    if self._parked_since is None:
+                        self._parked_since = time.monotonic()
+                    # Timed, not indefinite: while parked the pump still
+                    # owes the backend a slow drain (heartbeat frames
+                    # carry worker stats; a lease orphaned moments before
+                    # the pool went idle completes late and its dropped
+                    # completion must still be consumed). submit()/close()
+                    # notify_all for the instant-wake path.
+                    self._cond.wait(_PARK_TICK)
+                    just_woke = True
+                if self._parked_since is not None:
+                    self._pump_parked += (
+                        time.monotonic() - self._parked_since
+                    )
+                    self._parked_since = None
+            comps = backend.poll_completions(0.0 if just_woke else _IDLE_TICK)
             t_work = time.monotonic()
             for comp in comps:
                 self._handle_completion(comp)
@@ -1105,8 +1362,10 @@ class Manager:
             if hier:
                 # manager-of-managers: the leader only delegates; the
                 # sub-pumps own demand-driven dispatch for their shards
+                # (parked sub-pumps are woken when items land in shards)
                 with self._cond:
-                    self._distribute_locked()
+                    if self._distribute_locked():
+                        self._cond.notify_all()
             else:
                 # demand-driven dispatch: free slots = per-worker queue
                 # depth (slots_per_worker > 1 when the backend batches
